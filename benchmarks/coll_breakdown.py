@@ -1,0 +1,104 @@
+"""Collective breakdown from a stored dry-run HLO: top ops by bytes x trips.
+
+  python benchmarks/coll_breakdown.py command-r-plus-104b__train_4k__single
+"""
+
+import gzip
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_cost as hc  # noqa: E402
+
+HLO_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "hlo")
+
+
+def breakdown(tag: str, top: int = 18):
+    with gzip.open(os.path.join(HLO_DIR, tag + ".txt.gz"), "rt") as f:
+        txt = f.read()
+
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in txt.splitlines():
+        hdr = hc._COMP_HDR_RE.match(line.strip())
+        if hdr and "{" in line:
+            cur = hdr.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # trip count per while body + caller chains
+    trips = {}
+    parents = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = re.search(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", line)
+            if not m:
+                m2 = re.search(r"body=%?([\w.\-]+).*?condition=%?([\w.\-]+)", line)
+                m = None
+                if m2:
+                    trips_body, cond = m2.group(1), m2.group(2)
+                    const = max(
+                        [int(c) for l2 in comps.get(cond, [])
+                         for c in re.findall(r"constant\((\d+)\)", l2)] + [1]
+                    )
+                    trips[trips_body] = const
+                    parents[trips_body] = cname
+                continue
+            cond, body = m.group(1), m.group(2)
+            const = max(
+                [int(c) for l2 in comps.get(cond, [])
+                 for c in re.findall(r"constant\((\d+)\)", l2)] + [1]
+            )
+            trips[body] = const
+            parents[body] = cname
+        for line in lines:
+            fm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+            if fm:
+                parents.setdefault(fm.group(1), cname)
+
+    def total_mult(cname):
+        mult, seen = 1.0, set()
+        while cname in parents and cname not in seen:
+            seen.add(cname)
+            mult *= trips.get(cname, 1)
+            cname = parents[cname]
+        return mult
+
+    rows = []
+    for cname, lines in comps.items():
+        mult = total_mult(cname)
+        tmap = {}
+        for line in lines:
+            m = hc._OP_RE.match(line)
+            if not m:
+                continue
+            opn, rtype, opcode, args = m.groups()
+            tmap[opn] = rtype
+            base = opcode.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                b = hc._shape_bytes(rtype)
+                meta = re.search(r'op_name="([^"]*)"', line)
+                rows.append((b * mult, b, mult, base, rtype[:42],
+                             (meta.group(1) if meta else "")[-86:]))
+    rows.sort(reverse=True)
+    print(f"{'tot GiB':>8s} {'each MiB':>9s} {'trips':>6s} kind               shape")
+    for tot, b, mult, kind, rt, meta in rows[:top]:
+        print(f"{tot/2**30:8.2f} {b/2**20:9.1f} {mult:6.0f} {kind:18s} {rt}")
+        if meta:
+            print(f"{'':26s}{meta}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1] if len(sys.argv) > 1 else
+              "command-r-plus-104b__train_4k__single")

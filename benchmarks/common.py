@@ -1,0 +1,60 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+BSP makespan model (this container has one physical core, so multi-miner
+wall-clock is meaningless; the engine's per-superstep trace gives the exact
+parallel schedule instead):
+
+    T_P = sum_t [ max_p trace[p, t] * c_node ]  +  supersteps * c_round
+
+c_node is measured from a single-device run (wall seconds per expanded node);
+c_round models the per-superstep collective/steal latency (default 20 us — a
+v5e all-reduce latency scale; the paper's §5.2 makes the same argument that
+network latency only shifts the 'probe' share).  Speedup = T_1 / T_P.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+PROBLEMS = {
+    "hapmap_dom_10": dict(scale_items=0.08, scale_trans=1.0),
+    "hapmap_dom_20": dict(scale_items=0.04, scale_trans=1.0),
+    "alz_dom_5": dict(scale_items=0.015, scale_trans=1.0),
+    "mcf7": dict(scale_items=1.0, scale_trans=0.04),
+}
+
+C_ROUND_S = 20e-6  # modeled per-superstep collective latency
+
+
+def save_json(name: str, payload):
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def makespan(trace: np.ndarray, supersteps: int, c_node: float,
+             c_round: float = C_ROUND_S) -> float:
+    """trace [P, T_cap] popped-per-superstep -> modeled parallel seconds."""
+    t = trace[:, :supersteps] if supersteps <= trace.shape[1] else trace
+    return float(np.sum(t.max(axis=0)) * c_node + supersteps * c_round)
+
+
+def measure_c_node(problem_db, labels, min_sup, cfg_cls, mine_fn, devices):
+    """Single-device phase-2 run -> (seconds per node, nodes, wall)."""
+    cfg = cfg_cls(expand_batch=16, trace_cap=0)
+    mine_fn(problem_db, labels, mode="count", min_sup=min_sup, cfg=cfg,
+            devices=devices[:1])  # warm up compile
+    t0 = time.time()
+    out = mine_fn(problem_db, labels, mode="count", min_sup=min_sup, cfg=cfg,
+                  devices=devices[:1])
+    wall = time.time() - t0
+    nodes = int(out.stats["popped"].sum())
+    return wall / max(nodes, 1), nodes, wall

@@ -1,0 +1,187 @@
+"""Paper-table benchmarks (Tables 1-2, Figs 6-7, §5.6), one function per
+artifact.  Invoked by benchmarks.run with a multi-device CPU pool.
+
+All datasets are synthetics matched to the published Table-1 statistics
+(items/transactions/density/N_pos scaled to CPU-benchmark size; see
+repro.data.synthetic and EXPERIMENTS.md for the full caveat).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import EngineConfig, MineOutput, lamp_distributed, mine
+from repro.core.lamp import lamp
+from repro.data.synthetic import paper_problem
+
+from .common import C_ROUND_S, PROBLEMS, makespan, save_json
+
+TRACE_CAP = 16384
+
+
+def _load(name):
+    kw = PROBLEMS[name]
+    return paper_problem(name, kw["scale_items"], kw["scale_trans"])
+
+
+def table1_problems():
+    """Table 1 analogue: problem statistics + sequential + engine results."""
+    rows = []
+    for name in PROBLEMS:
+        db, labels, planted, spec = _load(name)
+        t0 = time.time()
+        ref = lamp(db, labels, alpha=0.05)
+        t1_host = time.time() - t0
+        t0 = time.time()
+        res = lamp_distributed(db, labels, alpha=0.05,
+                               cfg=EngineConfig(expand_batch=16))
+        wall_engine = time.time() - t0
+        assert res["min_sup"] == ref.min_sup, (name, res["min_sup"], ref.min_sup)
+        assert res["correction_factor"] == ref.correction_factor
+        rows.append({
+            "name": name, "items": spec.n_items, "trans": spec.n_transactions,
+            "density": spec.density, "n_pos": spec.n_pos,
+            "lambda": res["lambda_final"], "min_sup": res["min_sup"],
+            "closed_sets": res["correction_factor"],
+            "significant": res["n_significant"],
+            "t1_host_s": round(t1_host, 3),
+            "t_engine_wall_s": round(wall_engine, 3),
+            "matches_sequential_oracle": True,
+        })
+    save_json("table1.json", rows)
+    return rows
+
+
+def fig6_speedup(p_values=(1, 2, 4, 8, 16)):
+    """Fig 6 analogue: modeled speedup vs miner count from BSP traces."""
+    devices = jax.devices()
+    out = {}
+    for name in PROBLEMS:
+        db, labels, _, spec = _load(name)
+        ref = lamp(db, labels, alpha=0.05)
+        ms = ref.min_sup
+        # c_node from the single-device engine run
+        cfg1 = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+        r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg1,
+                  devices=devices[:1])
+        t0 = time.time()
+        mine(db, labels, mode="count", min_sup=ms,
+             cfg=EngineConfig(expand_batch=16), devices=devices[:1])
+        wall1 = time.time() - t0
+        nodes1 = int(r1.stats["popped"].sum())
+        c_node = wall1 / max(nodes1, 1)
+        t_1 = makespan(r1.trace, r1.supersteps, c_node)
+        rows = []
+        for p in p_values:
+            if p > len(devices):
+                continue
+            res = mine(db, labels, mode="count", min_sup=ms,
+                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP),
+                       devices=devices[:p])
+            t_p = makespan(res.trace, res.supersteps, c_node)
+            work = res.stats["popped"].astype(float)
+            rows.append({
+                "P": p,
+                "modeled_T_s": t_p,
+                "speedup": t_1 / t_p,
+                "efficiency": t_1 / t_p / p,
+                "supersteps": res.supersteps,
+                "work_imbalance": float(work.max() / max(work.mean(), 1e-9)),
+                "steals": int(res.stats["steals_got"].sum()),
+                "stolen_nodes": int(res.stats["stolen_nodes"].sum()),
+            })
+        out[name] = {"c_node_s": c_node, "nodes": nodes1, "curve": rows}
+    save_json("fig6_speedup.json", out)
+    return out
+
+
+def table2_naive(p: int = 8):
+    """Table 2 analogue: GLB vs the naive static split (steal disabled)."""
+    devices = jax.devices()
+    assert len(devices) >= p
+    rows = []
+    for name in PROBLEMS:
+        db, labels, _, spec = _load(name)
+        ref = lamp(db, labels, alpha=0.05)
+        ms = ref.min_sup
+        cfg1 = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+        r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg1,
+                  devices=devices[:1])
+        t0 = time.time()
+        mine(db, labels, mode="count", min_sup=ms,
+             cfg=EngineConfig(expand_batch=16), devices=devices[:1])
+        wall1 = time.time() - t0
+        c_node = wall1 / max(int(r1.stats["popped"].sum()), 1)
+        t_1 = makespan(r1.trace, r1.supersteps, c_node)
+        row = {"name": name, "t1_s": t_1}
+        for steal, label in [(True, "glb"), (False, "naive")]:
+            res = mine(db, labels, mode="count", min_sup=ms,
+                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP,
+                                        steal_enabled=steal),
+                       devices=devices[:p])
+            t_p = makespan(res.trace, res.supersteps, c_node)
+            work = res.stats["popped"].astype(float)
+            row[f"{label}_T_s"] = t_p
+            row[f"{label}_speedup"] = t_1 / t_p
+            row[f"{label}_imbalance"] = float(work.max() / max(work.mean(), 1e-9))
+            # correctness under both schedules
+            assert int(res.hist[ms:].sum()) == ref.correction_factor, name
+        rows.append(row)
+    save_json("table2.json", rows)
+    return rows
+
+
+def fig7_breakdown(p_values=(1, 4, 16)):
+    """Fig 7 analogue: per-process work/steal/idle breakdown."""
+    devices = jax.devices()
+    out = {}
+    for name in list(PROBLEMS)[:2]:  # two representative problems
+        db, labels, _, spec = _load(name)
+        ref = lamp(db, labels, alpha=0.05)
+        rows = []
+        for p in p_values:
+            if p > len(devices):
+                continue
+            res = mine(db, labels, mode="count", min_sup=ref.min_sup,
+                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP),
+                       devices=devices[:p])
+            rows.append({
+                "P": p,
+                "popped_per_dev": res.stats["popped"].tolist(),
+                "idle_steps_per_dev": res.stats["idle_steps"].tolist(),
+                "supersteps": res.supersteps,
+                "steals_got_per_dev": res.stats["steals_got"].tolist(),
+                "gives_per_dev": res.stats["gives"].tolist(),
+                "rejected_per_dev": res.stats["rejected"].tolist(),
+            })
+        out[name] = rows
+    save_json("fig7_breakdown.json", out)
+    return out
+
+
+def significant_patterns():
+    """§5.6 analogue: planted significant patterns are recovered."""
+    rows = []
+    for name in PROBLEMS:
+        db, labels, planted, spec = _load(name)
+        t0 = time.time()
+        res = lamp_distributed(db, labels, alpha=0.05,
+                               cfg=EngineConfig(expand_batch=16))
+        wall = time.time() - t0
+        ref = lamp(db, labels, alpha=0.05)
+        sig_sets = [set(s.items) for s in ref.significant]
+        recovered = sum(
+            any(set(pl) <= s for s in sig_sets) for pl in planted
+        )
+        rows.append({
+            "name": name, "planted": len(planted), "recovered": recovered,
+            "n_significant": res["n_significant"], "delta": res["delta"],
+            "wall_s": round(wall, 3),
+            "engine_matches_host": res["n_significant"] == len(ref.significant),
+        })
+    save_json("significant_patterns.json", rows)
+    return rows

@@ -1,0 +1,116 @@
+"""§Perf hillclimb — cell 3: the mining engine itself (paper-representative).
+
+Runs on real devices (the engine executes here, unlike the LM dry-run cells),
+so each iteration reports BOTH wall-clock (total work; CPU serializes the
+miners) and the modeled BSP makespan T_P (parallel schedule from traces).
+
+Iterations (hypothesis -> change -> measure -> verdict) are appended to
+experiments/bench/perf_miner.json and summarized in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import EngineConfig, lamp_distributed, mine
+from repro.core.lamp import lamp
+from repro.data.synthetic import paper_problem
+
+from .common import makespan, save_json
+
+TRACE = 16384
+P = 16
+
+
+def run_pipeline(db, labels, cfg, fuse):
+    t0 = time.time()
+    res = lamp_distributed(db, labels, alpha=0.05, cfg=cfg,
+                           devices=jax.devices()[:P], fuse_phase23=fuse)
+    wall = time.time() - t0
+    phases = res["phase_outputs"]
+    steps = sum(p.supersteps for p in phases)
+    popped = sum(int(p.stats["popped"].sum()) for p in phases)
+    return res, wall, steps, popped, phases
+
+
+def modeled_T(phases, c_node):
+    return sum(makespan(p.trace, p.supersteps, c_node) for p in phases)
+
+
+def run():
+    db, labels, _, spec = paper_problem("alz_dom_5", 0.015, 1.0)
+    ref = lamp(db, labels, alpha=0.05)
+    iterations = []
+
+    def record(name, hypothesis, cfg, fuse, baseline=None):
+        # warm-up compile, then measure
+        run_pipeline(db, labels, cfg, fuse)
+        res, wall, steps, popped, phases = run_pipeline(db, labels, cfg, fuse)
+        assert res["min_sup"] == ref.min_sup
+        assert res["correction_factor"] == ref.correction_factor
+        assert res["n_significant"] == len(ref.significant)
+        c_node = wall / max(popped, 1)  # per-node cost incl. batching effects
+        row = {
+            "name": name, "hypothesis": hypothesis,
+            "expand_batch": cfg.expand_batch, "steal_max": cfg.steal_max,
+            "fused": fuse, "wall_s": round(wall, 2), "supersteps": steps,
+            "popped_total": popped,
+            "modeled_T16_s": round(modeled_T(phases, c_node), 4),
+            "round_payload_bytes": cfg.steal_max * (db.shape[0] // 32 + 1 + 4) * 4,
+        }
+        if baseline:
+            for k in ("wall_s", "supersteps", "popped_total", "modeled_T16_s"):
+                row[f"{k}_vs_base"] = round(row[k] / max(baseline[k], 1e-9), 3)
+        iterations.append(row)
+        print(f"[{name}] wall={wall:.2f}s steps={steps} popped={popped} "
+              f"T16={row['modeled_T16_s']}s")
+        return row
+
+    base_cfg = EngineConfig(expand_batch=16, steal_max=128, trace_cap=TRACE)
+    base = record(
+        "baseline", "paper-faithful 3-phase pipeline, B=16, T=128", base_cfg, False
+    )
+    record(
+        "it1-fuse23",
+        "phase 3 re-traverses the tree only to re-test (sup,pos_sup) pairs; a "
+        "2-D histogram in phase 2 carries the same information -> expect "
+        "~1/3 fewer supersteps and ~1/3 less popcount-GEMM work",
+        base_cfg, True, base,
+    )
+    for b in (32, 64):
+        record(
+            f"it2-B{b}",
+            f"B={b}: halve/quarter superstep count (collective latency "
+            "amortization); risk: coarser steal granularity worsens tail "
+            "balance — expect better modeled T16 until imbalance bites",
+            EngineConfig(expand_batch=b, steal_max=128, trace_cap=TRACE),
+            True, base,
+        )
+    record(
+        "it3-T32",
+        "steals move ~10-30 nodes (measured) so a 128-slot GIVE buffer is 4x "
+        "oversized: T=32 cuts the per-round ppermute payload 4x with no "
+        "makespan change",
+        EngineConfig(expand_batch=32, steal_max=32, trace_cap=TRACE),
+        True, base,
+    )
+    record(
+        "it4-best",
+        "combine the winners: fused 2-pass + B=16 (best modeled makespan) + "
+        "T=32 (cheap rounds) — expect ~baseline/1.5 makespan",
+        EngineConfig(expand_batch=16, steal_max=32, trace_cap=TRACE),
+        True, base,
+    )
+    save_json("perf_miner.json", iterations)
+    return iterations
+
+
+if __name__ == "__main__":
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+    run()

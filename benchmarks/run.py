@@ -1,0 +1,143 @@
+import os
+
+# The mining benchmarks emulate a pool of miners (one per device), exactly as
+# the engine runs on a pod slice.  16 host devices is the benchmark pool — set
+# here, before any jax import, and ONLY here (the dry-run uses its own 512).
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+"""Benchmark runner: one artifact per paper table/figure + kernel rooflines
++ the LM dry-run roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig6_speedup
+"""
+
+import argparse
+import time
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _print_table(title, rows, cols):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(empty)")
+        return
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _run_fig6(mining_suite):
+    out = mining_suite.fig6_speedup()
+    for name, data in out.items():
+        _print_table(
+            f"Fig 6 — speedup: {name} (c_node {data['c_node_s']*1e6:.1f} us, "
+            f"{data['nodes']} nodes)",
+            data["curve"],
+            ["P", "speedup", "efficiency", "supersteps", "work_imbalance",
+             "steals", "stolen_nodes"],
+        )
+
+
+def _run_fig7(mining_suite):
+    out = mining_suite.fig7_breakdown()
+    for name, rows in out.items():
+        print(f"\n== Fig 7 — breakdown: {name} ==")
+        for r in rows:
+            popped = r["popped_per_dev"]
+            idle = r["idle_steps_per_dev"]
+            print(f" P={r['P']:3d} supersteps={r['supersteps']:6d} "
+                  f"popped[min/mean/max]={min(popped)}/"
+                  f"{int(sum(popped)/len(popped))}/{max(popped)} "
+                  f"idle[mean]={int(sum(idle)/len(idle))} "
+                  f"steals={sum(r['steals_got_per_dev'])}")
+
+
+def _run_kernels(kernel_roofline):
+    out = kernel_roofline.run()
+    _print_table(
+        "Pallas support-count kernel roofline (v5e)", out["support_count"],
+        ["shape", "block", "t_compute_us", "t_memory_us", "bound",
+         "vmem_per_step_kib", "fits_vmem", "verified_vs_oracle"],
+    )
+    _print_table(
+        "Pallas flash-attention roofline (v5e)", out["flash_attention"],
+        ["shape", "block", "tflops", "t_compute_s", "t_memory_s", "bound",
+         "vmem_per_step_kib"],
+    )
+
+
+def _run_lm_roofline():
+    from .roofline import analyze, load_all
+
+    recs = load_all()
+    if not recs:
+        print("\n(no dry-run artifacts; run repro.launch.dryrun first)")
+        return
+    rows = [analyze(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    _print_table(
+        "LM dry-run roofline (see EXPERIMENTS.md §Roofline)",
+        [
+            {
+                "cell": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+                "compute_s": r["t_compute_s"], "memory_s": r["t_memory_s"],
+                "coll_s": r["t_collective_s"], "bound": r["bottleneck"],
+                "roofl%": 100 * r["roofline_fraction"],
+                "GiB": r["mem_gib_per_dev"], "fits": r["fits_16g"],
+            }
+            for r in rows
+        ],
+        ["cell", "compute_s", "memory_s", "coll_s", "bound", "roofl%", "GiB",
+         "fits"],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from . import kernel_roofline, mining_suite
+
+    sections = {
+        "table1": lambda: _print_table(
+            "Table 1 — problems (synthetic, matched to paper stats)",
+            mining_suite.table1_problems(),
+            ["name", "items", "trans", "density", "lambda", "min_sup",
+             "closed_sets", "significant", "t1_host_s", "t_engine_wall_s"],
+        ),
+        "fig6_speedup": lambda: _run_fig6(mining_suite),
+        "table2": lambda: _print_table(
+            "Table 2 — GLB vs naive split (P=8, modeled makespan)",
+            mining_suite.table2_naive(),
+            ["name", "t1_s", "glb_T_s", "glb_speedup", "glb_imbalance",
+             "naive_T_s", "naive_speedup", "naive_imbalance"],
+        ),
+        "fig7": lambda: _run_fig7(mining_suite),
+        "significant": lambda: _print_table(
+            "§5.6 — significant patterns (planted-signal recovery)",
+            mining_suite.significant_patterns(),
+            ["name", "planted", "recovered", "n_significant", "delta",
+             "wall_s", "engine_matches_host"],
+        ),
+        "kernels": lambda: _run_kernels(kernel_roofline),
+        "lm_roofline": _run_lm_roofline,
+    }
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        fn()
+    print(f"\ntotal {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

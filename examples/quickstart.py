@@ -1,0 +1,45 @@
+"""Quickstart: significant pattern mining (LAMP) on a small synthetic GWAS
+matrix — sequential oracle vs the distributed BSP engine, in ~20 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, lamp_distributed
+from repro.core.lamp import lamp
+from repro.data.synthetic import SyntheticSpec, generate
+
+
+def main():
+    spec = SyntheticSpec(
+        name="demo", n_items=120, n_transactions=300, density=0.06, n_pos=100,
+        n_planted=2, planted_pos_rate=0.7, planted_neg_rate=0.03, seed=1,
+    )
+    db, labels, planted = generate(spec)
+    print(f"dataset: {spec.n_items} items x {spec.n_transactions} transactions, "
+          f"{spec.n_pos} positives; planted itemsets: {planted}")
+
+    # --- sequential reference (host numpy LCM+LAMP)
+    ref = lamp(db, labels, alpha=0.05)
+    print(f"\n[sequential] lambda={ref.lambda_final} min_sup={ref.min_sup} "
+          f"closed@min_sup={ref.correction_factor} delta={ref.delta:.2e} "
+          f"significant={len(ref.significant)}")
+    for s in ref.significant[:5]:
+        print(f"   items={sorted(s.items)} support={s.support} "
+              f"pos={s.pos_support} p={s.pvalue:.3e}")
+
+    # --- distributed BSP engine (all local devices; same three phases)
+    res = lamp_distributed(db, labels, alpha=0.05,
+                           cfg=EngineConfig(expand_batch=16))
+    print(f"\n[engine]     lambda={res['lambda_final']} min_sup={res['min_sup']} "
+          f"closed@min_sup={res['correction_factor']} delta={res['delta']:.2e} "
+          f"significant={res['n_significant']}")
+    assert res["min_sup"] == ref.min_sup
+    assert res["correction_factor"] == ref.correction_factor
+    assert res["n_significant"] == len(ref.significant)
+    print("\nengine output matches the sequential oracle — OK")
+
+
+if __name__ == "__main__":
+    main()

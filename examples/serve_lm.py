@@ -1,0 +1,24 @@
+"""Batched serving demo: prefill + iterative decode with a KV cache, using
+the same serve-step programs the dry-run lowers for the production mesh.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --gen 24
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve.main([
+        "--arch", args.arch, "--preset", "tiny", "--batch", "4",
+        "--prompt-len", "32", "--gen", str(args.gen), "--requests", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end LM training driver: a small model for a few hundred steps with
+checkpointing, on any of the 10 assigned architectures (reduced configs).
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~10M-param tiny
+  PYTHONPATH=src python examples/train_lm.py --arch recurrentgemma-9b
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+The same train_step program lowers for the 16x16 / 2x16x16 production meshes
+in repro.launch.dryrun; here it runs the CPU-scale configuration end to end
+(loss should drop well below the uniform baseline ln(vocab)).
+"""
+
+import argparse
+import math
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch import train
+
+    vocab = 512
+    losses = train.run([
+        "--arch", args.arch, "--preset", "tiny",
+        "--steps", str(args.steps), "--seq", "128", "--batch", "8",
+        "--lr", "3e-3", "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+    first, last = losses[0]["loss"], losses[-1]["loss"]
+    uniform = math.log(vocab)
+    print(f"\nloss {first:.3f} -> {last:.3f} (uniform baseline {uniform:.3f})")
+    assert last < first - 0.5, "training did not learn"
+    print("OK: model learned the synthetic Markov structure")
+
+
+if __name__ == "__main__":
+    main()

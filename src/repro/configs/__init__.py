@@ -1,0 +1,27 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from .base import REGISTRY, SHAPES, ArchConfig, RunShape, get_config, register
+
+ALL_ARCHS = (
+    "hubert-xlarge",
+    "qwen3-14b",
+    "minitron-4b",
+    "granite-3-2b",
+    "command-r-plus-104b",
+    "qwen2-vl-2b",
+    "phi3.5-moe-42b-a6.6b",
+    "dbrx-132b",
+    "recurrentgemma-9b",
+    "xlstm-125m",
+)
+
+register("hubert-xlarge", "repro.configs.hubert_xlarge")
+register("qwen3-14b", "repro.configs.qwen3_14b")
+register("minitron-4b", "repro.configs.minitron_4b")
+register("granite-3-2b", "repro.configs.granite_3_2b")
+register("command-r-plus-104b", "repro.configs.command_r_plus_104b")
+register("qwen2-vl-2b", "repro.configs.qwen2_vl_2b")
+register("phi3.5-moe-42b-a6.6b", "repro.configs.phi35_moe")
+register("dbrx-132b", "repro.configs.dbrx_132b")
+register("recurrentgemma-9b", "repro.configs.recurrentgemma_9b")
+register("xlstm-125m", "repro.configs.xlstm_125m")

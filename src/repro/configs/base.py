@@ -1,0 +1,193 @@
+"""Architecture + run-shape configuration system.
+
+Every assigned architecture is a frozen `ArchConfig` in its own module
+(`repro.configs.<id>`), selectable by `--arch <id>` in the launchers.
+`reduced()` derives the small same-family config used by CPU smoke tests.
+
+Run shapes (the assigned input-shape set; see DESIGN.md §4 for the
+applicability matrix):
+
+    train_4k     train_step   seq 4096,   global_batch 256
+    prefill_32k  serve prefill seq 32768, global_batch 32
+    decode_32k   serve decode  1 new token, KV len 32768, global_batch 128
+    long_500k    serve decode  1 new token, context 524288, global_batch 1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+__all__ = ["ArchConfig", "RunShape", "SHAPES", "REGISTRY", "register", "get_config"]
+
+
+@dataclass(frozen=True)
+class RunShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, RunShape] = {
+    "train_4k": RunShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": RunShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": RunShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": RunShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encoder | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention variants
+    causal: bool = True
+    qk_norm: bool = False
+    local_window: int = 0  # >0: sliding-window attention
+    rope_theta: float = 10_000.0
+    m_rope_sections: tuple[int, ...] = ()  # Qwen2-VL M-RoPE (t,h,w) pairs split
+    attn_logit_softcap: float = 0.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # block pattern: smallest repeating unit, e.g. ("rglru","rglru","attn").
+    # () means ("attn",) * 1 homogeneous transformer blocks.
+    block_pattern: tuple[str, ...] = ()
+    # extra (unscanned) layers appended after the scanned units, for depths
+    # not divisible by the pattern length (recurrentgemma: 38 = 12*3 + 2)
+    block_tail: tuple[str, ...] = ()
+
+    # modality frontend stub: inputs are precomputed embeddings, not token ids
+    embed_inputs: bool = False
+    tie_embeddings: bool = False
+
+    # mlp variant: "swiglu" | "gelu"
+    mlp: str = "swiglu"
+    # parallel attention+FFN residual block (Cohere/GPT-J layout): one shared
+    # norm feeds both branches -> one TP gather + one reduce per layer
+    parallel_block: bool = False
+    # attention sharding for train/prefill (EXPERIMENTS.md §Perf):
+    #   "tp_heads": q-heads shard over 'model', KV replicated+expanded —
+    #               best when n_heads % 16 == 0 (cmd-r+, dbrx, phi, granite…)
+    #   "context":  batch+seq sharding, heads replicated — best when head
+    #               padding / KV expansion outweighs TP (qwen3 40H, 24H, 12H)
+    attn_sharding: str = "tp_heads"
+    # RG-LRU / xLSTM hyper-params
+    rnn_width: int = 0  # RG-LRU recurrent width (recurrentgemma: d_model)
+    conv_width: int = 4
+
+    # small models: map BOTH mesh axes to data parallelism (params
+    # replicated; per-layer TP collectives vanish).  Train/prefill only.
+    pure_dp: bool = False
+    # training
+    remat: bool = True
+    grad_accum: int = 1  # microbatch count for train_step
+    # compute dtype: "bf16" on TPU; reduced CPU smoke configs use "f32"
+    # (this container's XLA:CPU cannot execute bf16 dots — lowering is fine)
+    dtype: str = "bf16"
+
+    # which run shapes apply (DESIGN.md §Shape-applicability)
+    supported_shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    shape_skips: dict = field(default_factory=dict)  # name -> reason
+
+    source: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        return self.block_pattern or ("attn",)
+
+    @property
+    def n_units(self) -> int:
+        scanned = self.n_layers - len(self.block_tail)
+        assert scanned % len(self.pattern) == 0, (self.name, self.pattern)
+        return scanned // len(self.pattern)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embedding + blocks), for rooflines."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim_
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for kind in self.pattern:
+            if kind in ("attn", "local_attn"):
+                attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+                total += self.n_units * attn
+            if kind == "rglru":
+                w = self.rnn_width or d
+                total += self.n_units * (2 * d * w + w * d + 2 * w * w // 8 + self.conv_width * w)
+            if kind == "mlstm":
+                total += self.n_units * (2 * d * 2 * d + 2 * d * d + 3 * 2 * d * (2 * d // self.n_heads))
+            if kind == "slstm":
+                total += self.n_units * (4 * d * d + 2 * d * int(d * 4 / 3))
+        # mlp per block (except pure lstm blocks, which embed their own)
+        mlp_blocks = sum(1 for k in self.pattern if k in ("attn", "local_attn", "rglru"))
+        if self.n_experts:
+            total += self.n_layers * self.n_experts * 3 * d * f
+        else:
+            n_mlp = self.n_units * mlp_blocks
+            mult = 3 if self.mlp == "swiglu" else 2
+            total += n_mlp * mult * d * f
+        return total
+
+    def n_active_params(self) -> int:
+        if not self.n_experts:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense = self.n_params() - self.n_layers * self.n_experts * 3 * d * f
+        return dense + self.n_layers * self.top_k * 3 * d * f
+
+    def reduced(self) -> "ArchConfig":
+        """Same-family tiny config for CPU smoke tests."""
+        unit = len(self.pattern)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=unit * (2 if unit == 1 else 1) + len(self.block_tail),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            # no capacity drops at smoke-test scale (keeps decode == prefill)
+            moe_capacity_factor=8.0 if self.n_experts else 1.25,
+            local_window=min(self.local_window, 16) if self.local_window else 0,
+            rnn_width=64 if self.rnn_width else 0,
+            m_rope_sections=(2, 3, 3) if self.m_rope_sections else (),
+            grad_accum=1,
+            dtype="f32",
+        )
+
+
+REGISTRY: dict[str, str] = {}
+
+
+def register(arch_id: str, module: str):
+    REGISTRY[arch_id] = module
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    import importlib
+
+    if arch_id not in REGISTRY:
+        from . import ALL_ARCHS  # noqa: F401  (populates REGISTRY)
+    mod = importlib.import_module(REGISTRY[arch_id])
+    return mod.CONFIG

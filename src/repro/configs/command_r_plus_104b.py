@@ -1,0 +1,20 @@
+"""Command-R+ 104B — dense decoder, GQA(8), no biases, parallel
+attention+FFN residual blocks [hf:CohereForAI] (also halves the per-layer TP
+boundary collectives — EXPERIMENTS.md §Perf)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab=256000,
+    grad_accum=8,
+    parallel_block=True,
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    source="hf:CohereForAI/c4ai-command-r-v01 (unverified)",
+)

@@ -1,0 +1,19 @@
+"""DBRX 132B — fine-grained MoE, 16 experts top-4 [hf:databricks/dbrx-base]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab=100352,
+    n_experts=16,
+    top_k=4,
+    grad_accum=8,
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    source="hf:databricks/dbrx-base (unverified)",
+)

@@ -1,0 +1,18 @@
+"""Granite-3.0-2B — dense decoder, GQA(8), tied embeddings [hf:ibm-granite]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab=49155,
+    tie_embeddings=True,
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    grad_accum=2,
+    source="hf:ibm-granite/granite-3.0-2b-base (hf)",
+)

@@ -1,0 +1,29 @@
+"""HuBERT-XLarge — encoder-only audio transformer [arXiv:2106.07447].
+
+Backbone only: the audio frontend (conv feature extractor) is a stub per the
+assignment; inputs are precomputed frame embeddings [B, S, d_model].
+Encoder-only => no autoregressive decode shapes (DESIGN.md §Shape-applicability).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    mlp="gelu",
+    embed_inputs=True,
+    supported_shapes=("train_4k", "prefill_32k"),
+    shape_skips={
+        "decode_32k": "encoder-only: no autoregressive decode / KV cache",
+        "long_500k": "encoder-only + full quadratic attention",
+    },
+    grad_accum=2,
+    source="arXiv:2106.07447 (unverified)",
+)

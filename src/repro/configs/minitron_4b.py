@@ -1,0 +1,22 @@
+"""Minitron-4B — width/depth-pruned Nemotron [arXiv:2407.14679].
+
+Nemotron family uses squared-ReLU (non-gated) MLP.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab=256000,
+    mlp="relu2",
+    attn_sharding="context",
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    grad_accum=2,
+    source="arXiv:2407.14679 (hf)",
+)

@@ -1,0 +1,25 @@
+"""Qwen2-VL-2B — VLM backbone with M-RoPE [arXiv:2409.12191].
+
+Backbone only: the vision tower is a stub; train/prefill inputs are
+precomputed patch embeddings plus M-RoPE (t,h,w) position ids.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    m_rope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    embed_inputs=True,
+    attn_sharding="context",
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    grad_accum=2,
+    source="arXiv:2409.12191 (hf)",
+)

@@ -1,0 +1,20 @@
+"""Qwen3-14B — dense decoder, GQA(8), qk-norm [hf:Qwen/Qwen3-8B family]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    attn_sharding="context",
+    shape_skips={"long_500k": "pure full attention (O(S^2)); skipped per spec"},
+    grad_accum=4,
+    source="hf:Qwen/Qwen3-8B (hf)",
+)

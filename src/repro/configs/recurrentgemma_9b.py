@@ -1,0 +1,26 @@
+"""RecurrentGemma-9B — Griffin hybrid: RG-LRU + local attention, 1:2
+[arXiv:2402.19427].
+
+38 layers = 12 x (rglru, rglru, local_attn) units + a 2-layer recurrent tail.
+Sub-quadratic: runs the long_500k shape (bounded window cache + RNN state).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    local_window=2048,
+    rnn_width=4096,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    block_tail=("rglru", "rglru"),
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    grad_accum=4,
+    source="arXiv:2402.19427 (unverified)",
+)

@@ -1,0 +1,25 @@
+"""xLSTM-125M — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+12 blocks = 3 x (mlstm, mlstm, mlstm, slstm) units (the paper's xLSTM[a:b]
+notation; ratio choice documented in DESIGN.md).  d_ff=0: xLSTM blocks carry
+their own projections instead of a separate FFN.  Constant-size state =>
+runs long_500k.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab=50304,
+    block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    grad_accum=1,
+    pure_dp=True,
+    source="arXiv:2405.04517 (unverified)",
+)

@@ -1,0 +1,109 @@
+"""Packed-bitmap transaction database (paper §4.6).
+
+The paper's target is a *dense* database with relatively few transactions
+(GWAS mutation matrices: 10k-250k items x ~300-700 individuals).  It explicitly
+drops database-reduction and counts supports with the POPCNT instruction on
+64-bit registers.  The TPU adaptation keeps the same representation and widens
+the word-parallel popcount to (8,128) vector registers:
+
+    db_bits[j, w]   uint32 word w of item j's transaction column
+    occ[..., w]     occurrence bitmap of an itemset (node payload)
+    support(occ)    = sum_w popcount(occ[w])
+    supports vs DB  = popcount-GEMM: S[b, j] = sum_w popcount(occ[b, w] & db[j, w])
+
+`supports_ref` here is the pure-jnp oracle; the Pallas kernel in
+repro.kernels.support_count implements the same contraction with VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+__all__ = [
+    "WORD_BITS",
+    "num_words",
+    "pack_db",
+    "unpack_occ",
+    "full_occ",
+    "popcount_np",
+    "support_np",
+    "supports_np",
+    "support_jnp",
+    "supports_ref",
+]
+
+
+def num_words(n_transactions: int) -> int:
+    return (n_transactions + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_db(db_bool: np.ndarray) -> np.ndarray:
+    """[N_transactions, M_items] bool -> [M, W] uint32 (bit t of word w = transaction 32w+t)."""
+    db_bool = np.asarray(db_bool, dtype=bool)
+    n, m = db_bool.shape
+    w = num_words(n)
+    padded = np.zeros((w * WORD_BITS, m), dtype=bool)
+    padded[:n] = db_bool
+    # bitorder='little': bit k of byte corresponds to row (byte*8 + k)
+    bytes_ = np.packbits(padded, axis=0, bitorder="little")  # [W*4, M]
+    words = bytes_.reshape(w, 4, m).astype(np.uint32)
+    out = words[:, 0] | (words[:, 1] << 8) | (words[:, 2] << 16) | (words[:, 3] << 24)
+    return np.ascontiguousarray(out.T)  # [M, W]
+
+
+def unpack_occ(occ: np.ndarray, n_transactions: int) -> np.ndarray:
+    """[..., W] uint32 -> [..., N] bool."""
+    occ = np.asarray(occ, dtype=np.uint32)
+    b0 = occ & 0xFF
+    b1 = (occ >> 8) & 0xFF
+    b2 = (occ >> 16) & 0xFF
+    b3 = (occ >> 24) & 0xFF
+    bytes_ = np.stack([b0, b1, b2, b3], axis=-1).astype(np.uint8)  # [..., W, 4]
+    bits = np.unpackbits(bytes_, axis=-1, bitorder="little")  # [..., W, 32]
+    bits = bits.reshape(*occ.shape[:-1], occ.shape[-1] * WORD_BITS)
+    return bits[..., :n_transactions].astype(bool)
+
+
+def full_occ(n_transactions: int) -> np.ndarray:
+    """All-transactions occurrence bitmap with the tail bits zeroed."""
+    w = num_words(n_transactions)
+    occ = np.full(w, 0xFFFFFFFF, dtype=np.uint32)
+    tail = n_transactions % WORD_BITS
+    if tail:
+        occ[-1] = np.uint32((1 << tail) - 1)
+    return occ
+
+
+# ------------------------------------------------------------------ numpy path
+def popcount_np(x: np.ndarray) -> np.ndarray:
+    return np.bitwise_count(x)
+
+
+def support_np(occ: np.ndarray) -> np.ndarray:
+    """[..., W] -> [...] int32 popcount sum."""
+    return popcount_np(occ).sum(axis=-1).astype(np.int32)
+
+
+def supports_np(occ: np.ndarray, db_bits: np.ndarray) -> np.ndarray:
+    """Popcount-GEMM oracle. occ [..., W], db_bits [M, W] -> [..., M] int32."""
+    inter = occ[..., None, :] & db_bits  # [..., M, W]
+    return popcount_np(inter).sum(axis=-1).astype(np.int32)
+
+
+# -------------------------------------------------------------------- jax path
+def support_jnp(occ: jax.Array) -> jax.Array:
+    return jnp.sum(jax.lax.population_count(occ), axis=-1).astype(jnp.int32)
+
+
+def supports_ref(occ: jax.Array, db_bits: jax.Array) -> jax.Array:
+    """Pure-jnp popcount-GEMM (oracle for the Pallas kernel).
+
+    occ [B, W] uint32, db_bits [M, W] uint32 -> [B, M] int32.
+    """
+    inter = occ[:, None, :] & db_bits[None, :, :]  # [B, M, W]
+    return jnp.sum(jax.lax.population_count(inter), axis=-1).astype(jnp.int32)

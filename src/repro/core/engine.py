@@ -1,0 +1,538 @@
+"""Distributed BSP miner: LCM+LAMP with lifeline work stealing (paper §4).
+
+One logical miner per device.  The whole search runs as a single compiled
+`shard_map` program over a 1-D mesh axis "miners":
+
+  superstep (lax.while_loop body):
+    1. EXPAND   pop up to `expand_batch` nodes from the local stack; one
+                popcount-GEMM gives every extension's support; deferred-PPC
+                validation, closed-set counting, child generation (core/lcm.py
+                documents the deferred-PPC scheme).
+    2. STEAL    one lifeline/random exchange round (core/lifeline.py): hungry
+                devices (empty stack) send a request bit along the round's
+                permutation; a victim donates half its stack (bottom half =
+                oldest/shallowest subtrees), capped at `steal_max` nodes, via
+                the inverse permutation.  REQUEST/GIVE/REJECT collapses into
+                one paired ppermute exchange (DESIGN.md §2).
+    3. GLOBAL   psum the support histogram -> recompute lambda (paper §4.4:
+                the piggybacked gather/broadcast; staleness only costs work),
+                psum stack sizes -> exact BSP termination test (paper §4.3's
+                DTD is only needed on the async host plane; core/termination.py).
+
+Node payload (fixed size, steal-friendly):  occ [W]u32, core i32, pc i32,
+sup i32, flags i32   (flags bit0: "resume" node — already counted, continues
+child generation past the per-superstep push cap).
+
+Modes:
+  lamp1  dynamic lambda by support increase  -> lambda_final
+  count  static min_sup                      -> k = CS(min_sup)
+  test   static min_sup + delta              -> #significant + sample buffer
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .bitmap import full_occ, num_words, pack_db, supports_np
+from .fisher import lamp_count_thresholds, fisher_pvalue_jnp
+from .lifeline import LifelineSchedule, build_schedule
+
+INT_MAX = np.int32(2**31 - 1)
+
+STAT_NAMES = (
+    "popped", "rejected", "closed", "pushed", "steals_got", "gives",
+    "idle_steps", "supersteps", "overflow", "stolen_nodes",
+)
+_NSTAT = len(STAT_NAMES)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    expand_batch: int = 16         # B: nodes popped per device per superstep
+    stack_cap: int = 8192          # CAP
+    steal_max: int = 256           # T: max nodes per GIVE
+    push_cap: int = 1024           # C: max child pushes per superstep
+    out_cap: int = 1024            # significant-sample buffer (mode="test")
+    max_steps: int = 100_000
+    n_random_perms: int = 4
+    seed: int = 0
+    steal_enabled: bool = True     # False = the paper's "naive approach" (§5.4)
+    kernel_impl: str = "ref"       # "ref" | "pallas" (TPU) | "pallas_interpret"
+    trace_cap: int = 0             # >0: record popped-per-superstep [trace_cap]
+
+
+@dataclass
+class MineOutput:
+    hist: np.ndarray               # [N+2] global closed-set support histogram
+    lam_final: int
+    supersteps: int
+    stats: dict[str, np.ndarray]   # per-device counters [P]
+    sig_count: int = 0             # mode="test"
+    sig_sup: np.ndarray | None = None
+    sig_pos_sup: np.ndarray | None = None
+    trace: np.ndarray | None = None  # [P, trace_cap] popped per superstep
+    hist2d: np.ndarray | None = None  # [N+1, Npos+1] (mode="count2d")
+
+
+def _thresholds_int(n: int, n_pos: int, alpha: float) -> np.ndarray:
+    thr = lamp_count_thresholds(n, n_pos, alpha)
+    out = np.minimum(np.floor(thr), float(INT_MAX)).astype(np.int64)
+    out = out.astype(np.int32)
+    out[0] = INT_MAX  # bucket 0 never drives lambda
+    out[np.isinf(thr)] = INT_MAX
+    return out
+
+
+def _supports(occ_nodes, db_mw, db_wm, impl):
+    if impl == "ref":
+        inter = occ_nodes[:, None, :] & db_mw[None, :, :]
+        return jnp.sum(lax.population_count(inter), axis=-1).astype(jnp.int32)
+    from repro.kernels.support_count.ops import support_counts
+
+    return support_counts(
+        occ_nodes, db_wm, interpret=(impl == "pallas_interpret")
+    )
+
+
+def preprocess(db_bool: np.ndarray, n_proc: int, cfg: EngineConfig, min_sup: int = 1):
+    """Paper §4.5: expand the root on the host, deal depth-1 nodes round-robin.
+
+    Returns (db_bits [M,W], init_occ [P,CAP,W], init_meta [P,CAP,4],
+             init_sp [P], root_support).
+    """
+    db_bool = np.asarray(db_bool, dtype=bool)
+    n, m = db_bool.shape
+    w = num_words(n)
+    db_bits = pack_db(db_bool)
+    occ0 = full_occ(n)
+    s = supports_np(occ0, db_bits)
+    in_clo = s == n
+    cand = np.flatnonzero((~in_clo) & (s >= max(1, min_sup)))
+    clo_cum = np.concatenate([[0], np.cumsum(in_clo)])  # clo_cum[e] = |clo ∩ [0,e)|
+
+    cap = cfg.stack_cap
+    init_occ = np.zeros((n_proc, cap, w), dtype=np.uint32)
+    init_meta = np.zeros((n_proc, cap, 4), dtype=np.int32)
+    init_sp = np.zeros(n_proc, dtype=np.int32)
+    for e in cand:
+        p = int(e) % n_proc  # the paper's  i mod P = p_i  assignment
+        sp = init_sp[p]
+        assert sp < cap, "stack_cap too small for depth-1 preprocess"
+        init_occ[p, sp] = occ0 & db_bits[e]
+        init_meta[p, sp] = (e, clo_cum[e], s[e], 0)
+        init_sp[p] = sp + 1
+    return db_bits, init_occ, init_meta, init_sp, n
+
+
+def _make_steal_round(schedule: LifelineSchedule, cfg: EngineConfig, w: int, axis: str):
+    """Returns steal_round(t, occ_stack, meta, sp) -> (occ_stack, meta, sp, got, gave, k_given)."""
+    T = cfg.steal_max
+    cap = cfg.stack_cap
+
+    def one_round(req_pairs, rep_pairs, occ_stack, meta, sp):
+        hungry = (sp == 0).astype(jnp.int32)
+        req_in = lax.ppermute(hungry, axis, perm=list(req_pairs))
+        donate = (req_in > 0) & (sp > 1)
+        k = jnp.where(donate, jnp.minimum(sp // 2, T), 0)
+        rows = jnp.arange(T)
+        pay_mask = rows < k
+        pay_occ = jnp.where(pay_mask[:, None], occ_stack[:T], 0)
+        pay_meta = jnp.where(pay_mask[:, None], meta[:T], 0)
+        # remove donated bottom-k, shift stack down
+        idx = jnp.arange(cap) + k
+        occ_stack = jnp.take(occ_stack, idx, axis=0, mode="fill", fill_value=0)
+        meta = jnp.take(meta, idx, axis=0, mode="fill", fill_value=0)
+        sp = sp - k
+        # reply to (the only possible) requester
+        recv_k = lax.ppermute(k, axis, perm=list(rep_pairs))
+        recv_occ = lax.ppermute(pay_occ, axis, perm=list(rep_pairs))
+        recv_meta = lax.ppermute(pay_meta, axis, perm=list(rep_pairs))
+        got = recv_k > 0  # only ever true for requesters (they had sp == 0)
+        wmask = (rows < recv_k)[:, None]
+        occ_stack = occ_stack.at[:T].set(jnp.where(wmask, recv_occ, occ_stack[:T]))
+        meta = meta.at[:T].set(jnp.where(wmask, recv_meta, meta[:T]))
+        sp = jnp.where(got, recv_k, sp)
+        return occ_stack, meta, sp, got.astype(jnp.int32), donate.astype(jnp.int32), k
+
+    branches = [
+        functools.partial(one_round, req, rep) for (req, rep) in schedule.rounds
+    ]
+
+    def steal_round(t, occ_stack, meta, sp):
+        return lax.switch(t % schedule.n_rounds, branches, occ_stack, meta, sp)
+
+    return steal_round
+
+
+def build_mine_step(
+    *, n: int, n_pos: int, m: int, w: int, cfg: EngineConfig,
+    schedule: LifelineSchedule, mode: str, axis: str = "miners",
+):
+    """Returns the per-device BSP program body used under shard_map."""
+    B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
+    NB = n + 2
+    NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
+    steal_round = _make_steal_round(schedule, cfg, w, axis)
+    dyn_lambda = mode == "lamp1"
+    testing = mode == "test"
+    hist2d_mode = mode == "count2d"
+
+    def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
+               pos_mask, out_buf, out_ptr, delta):
+        take = jnp.minimum(sp, B)
+        rows = jnp.arange(B)
+        node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
+        row_valid = rows < take
+        occ_nodes = occ_stack[node_idx]          # [B, W]
+        meta_nodes = meta[node_idx]              # [B, 4]
+        core = meta_nodes[:, 0]
+        pc = meta_nodes[:, 1]
+        sup = meta_nodes[:, 2]
+        flags = meta_nodes[:, 3]
+        sp_after = sp - take
+
+        alive = row_valid & (sup >= lam)
+        supports = _supports(occ_nodes, db_mw, db_wm, cfg.kernel_impl)  # [B, M]
+        item_ids = jnp.arange(m)[None, :]
+        in_clo = supports == sup[:, None]
+        prefix_ct = jnp.sum(in_clo & (item_ids < core[:, None]), axis=1)
+        is_resume = (flags & 1) == 1
+        ppc_ok = is_resume | (core < 0) | (prefix_ct == pc)
+        accepted = alive & ppc_ok
+        counted = accepted & (~is_resume)
+
+        hist = hist.at[jnp.clip(sup, 0, NB - 1)].add(counted.astype(jnp.int32))
+        if hist2d_mode:
+            pos_sup2 = jnp.sum(
+                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
+            ).astype(jnp.int32)
+            cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup2, 0, n_pos)
+            hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
+
+        sig_cnt = jnp.int32(0)
+        if testing:
+            pos_sup = jnp.sum(
+                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
+            ).astype(jnp.int32)
+            pvals = fisher_pvalue_jnp(sup, pos_sup, n, n_pos)
+            sig = counted & (pvals <= delta)
+            sig_cnt = jnp.sum(sig.astype(jnp.int32))
+            # append (sup, pos_sup) samples of significant sets
+            sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]
+            pos = jnp.where(sig_idx >= 0, out_ptr + jnp.arange(B), cfg.out_cap + 1)
+            vals = jnp.stack(
+                [sup[jnp.clip(sig_idx, 0, B - 1)], pos_sup[jnp.clip(sig_idx, 0, B - 1)]],
+                axis=1,
+            )
+            out_buf = out_buf.at[pos].set(vals, mode="drop")
+            out_ptr = jnp.minimum(out_ptr + sig_cnt, cfg.out_cap)
+
+        # ---- children
+        cand = (
+            accepted[:, None]
+            & (item_ids > core[:, None])
+            & (supports < sup[:, None])
+            & (supports >= lam)
+        )
+        clo_cum_excl = jnp.cumsum(in_clo.astype(jnp.int32), axis=1) - in_clo.astype(jnp.int32)
+        flat = cand.reshape(-1)
+        cand_idx = jnp.nonzero(flat, size=C, fill_value=-1)[0]
+        valid_child = cand_idx >= 0
+        n_taken = jnp.sum(valid_child.astype(jnp.int32))
+        child_b = jnp.clip(cand_idx // m, 0, B - 1)
+        child_j = jnp.clip(cand_idx % m, 0, m - 1)
+        child_occ = occ_nodes[child_b] & db_mw[child_j]
+        child_meta = jnp.stack(
+            [
+                child_j,
+                clo_cum_excl[child_b, child_j],
+                supports[child_b, child_j],
+                jnp.zeros_like(child_j),
+            ],
+            axis=1,
+        )
+        push_pos = jnp.where(valid_child, sp_after + jnp.arange(C), CAP + C)
+        overflow = jnp.any(valid_child & (push_pos >= CAP))
+        occ_stack = occ_stack.at[push_pos].set(child_occ, mode="drop")
+        meta = meta.at[push_pos].set(child_meta, mode="drop")
+        sp2 = jnp.minimum(sp_after + n_taken, CAP)
+
+        # ---- resume parents whose children overflowed the push cap
+        row_counts = jnp.sum(cand.astype(jnp.int32), axis=1)
+        row_offset = jnp.cumsum(row_counts) - row_counts
+        taken_per_row = jnp.clip(C - row_offset, 0, row_counts)
+        needs_resume = accepted & (taken_per_row < row_counts)
+        pos_in_row = jnp.cumsum(cand.astype(jnp.int32), axis=1) - cand.astype(jnp.int32)
+        first_untaken = cand & (pos_in_row == taken_per_row[:, None])
+        cursor = jnp.argmax(first_untaken, axis=1)  # first candidate not pushed
+        res_meta = jnp.stack(
+            [cursor - 1, jnp.zeros(B, jnp.int32), sup, jnp.ones(B, jnp.int32)], axis=1
+        )
+        res_pos = jnp.where(needs_resume, sp2 + jnp.cumsum(needs_resume) - 1, CAP + C)
+        overflow = overflow | jnp.any(needs_resume & (res_pos >= CAP))
+        occ_stack = occ_stack.at[res_pos].set(occ_nodes, mode="drop")
+        meta = meta.at[res_pos].set(res_meta, mode="drop")
+        sp3 = jnp.minimum(sp2 + jnp.sum(needs_resume.astype(jnp.int32)), CAP)
+
+        stats = stats.at[0].add(jnp.sum(alive.astype(jnp.int32)))
+        stats = stats.at[1].add(jnp.sum((alive & ~ppc_ok).astype(jnp.int32)))
+        stats = stats.at[2].add(jnp.sum(counted.astype(jnp.int32)))
+        stats = stats.at[3].add(n_taken)
+        stats = stats.at[8].add(overflow.astype(jnp.int32))
+        return (occ_stack, meta, sp3, hist, hist2d, stats, out_buf, out_ptr,
+                sig_cnt)
+
+    def body(carry, db_mw, db_wm, pos_mask, thr, delta):
+        (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_buf, out_ptr,
+         n_sig, trace, _work) = carry
+        popped_before = stats[0]
+        (occ_stack, meta, sp, hist, hist2d, stats, out_buf, out_ptr,
+         sig_cnt) = expand(
+            occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
+            pos_mask, out_buf, out_ptr, delta,
+        )
+        if cfg.trace_cap:
+            trace = trace.at[jnp.minimum(t, cfg.trace_cap - 1)].add(
+                stats[0] - popped_before
+            )
+        n_sig = n_sig + sig_cnt
+        if cfg.steal_enabled:
+            occ_stack, meta, sp, got, gave, k_given = steal_round(t, occ_stack, meta, sp)
+            stats = stats.at[4].add(got)
+            stats = stats.at[5].add(gave)
+            stats = stats.at[9].add(k_given)
+        stats = stats.at[6].add((sp == 0).astype(jnp.int32))
+        stats = stats.at[7].add(1)
+
+        if dyn_lambda:
+            # one fused collective: [histogram | stack size] (paper §4.4's
+            # piggyback of the counter onto the termination traffic)
+            packed = lax.psum(jnp.concatenate([hist, sp[None]]), axis)
+            g_hist, work = packed[:NB], packed[NB]
+            cs = jnp.cumsum(g_hist[::-1])[::-1]  # cs[x] = #closed with sup >= x
+            cond = cs > thr
+            best = jnp.max(jnp.where(cond, jnp.arange(NB), 0))
+            lam = jnp.maximum(lam, jnp.maximum(best + 1, 1)).astype(jnp.int32)
+        else:
+            work = lax.psum(sp, axis)
+        return (occ_stack, meta, sp, hist, hist2d, lam, t + 1, stats, out_buf,
+                out_ptr, n_sig, trace, work)
+
+    def program(init_occ, init_meta, init_sp, db_mw, db_wm, pos_mask, thr,
+                lam0, delta):
+        # per-device views arrive with a leading length-1 shard axis
+        occ_stack = init_occ[0]
+        meta = init_meta[0]
+        sp = init_sp[0]
+        hist = jnp.zeros(NB, jnp.int32)
+        hist2d = jnp.zeros(NB2, jnp.int32)
+        stats = jnp.zeros(_NSTAT, jnp.int32)
+        out_buf = jnp.zeros((cfg.out_cap, 2), jnp.int32)
+        out_ptr = jnp.int32(0)
+        n_sig = jnp.int32(0)
+        t = jnp.int32(0)
+        trace = jnp.zeros(max(cfg.trace_cap, 1), jnp.int32)
+
+        def cond_fn(carry):
+            t = carry[5]
+            work = carry[-1]  # psum'd at the previous superstep boundary:
+            return (work > 0) & (t < cfg.max_steps)  # exact BSP termination
+
+        work0 = lax.psum(sp, axis)
+        carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_buf,
+                 out_ptr, n_sig, trace, work0)
+        carry = lax.while_loop(
+            cond_fn, lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta), carry
+        )
+        (_, _, _, hist, hist2d, lam, t, stats, out_buf, out_ptr, n_sig, trace,
+         _) = carry
+        g_hist = lax.psum(hist, axis)
+        g_hist2d = lax.psum(hist2d, axis)  # once, at termination — not per step
+        g_sig = lax.psum(n_sig, axis)
+        return (
+            g_hist, lam, t, stats[None], out_buf[None], out_ptr[None], g_sig,
+            trace[None], g_hist2d,
+        )
+
+    return program
+
+
+def mine(
+    db_bool: np.ndarray,
+    labels: np.ndarray | None = None,
+    *,
+    mode: str = "lamp1",
+    alpha: float = 0.05,
+    min_sup: int = 1,
+    delta: float = 0.0,
+    cfg: EngineConfig = EngineConfig(),
+    devices=None,
+) -> MineOutput:
+    """Run one engine pass over all (or the given) local devices."""
+    assert mode in ("lamp1", "count", "test", "count2d")
+    db_bool = np.asarray(db_bool, dtype=bool)
+    n, m = db_bool.shape
+    w = num_words(n)
+    if devices is None:
+        devices = jax.devices()
+    n_proc = len(devices)
+    mesh = Mesh(np.array(devices), ("miners",))
+    schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
+
+    if labels is not None:
+        labels = np.asarray(labels, dtype=bool)
+        n_pos = int(labels.sum())
+        pos_mask_bits = pack_db(labels[:, None])[0]  # [W]
+    else:
+        n_pos = max(1, n // 2)
+        pos_mask_bits = np.zeros(w, dtype=np.uint32)
+
+    start_sup = min_sup if mode != "lamp1" else 1
+    db_bits, init_occ, init_meta, init_sp, root_sup = preprocess(
+        db_bool, n_proc, cfg, start_sup
+    )
+    thr = _thresholds_int(n, n_pos, alpha)
+
+    program = build_mine_step(
+        n=n, n_pos=n_pos, m=m, w=w, cfg=cfg, schedule=schedule, mode=mode
+    )
+    shardy = jax.shard_map(
+        program,
+        mesh=mesh,
+        in_specs=(
+            P("miners"), P("miners"), P("miners"),  # stacks
+            P(), P(), P(), P(),  # db_mw, db_wm, pos_mask, thr
+            P(), P(),  # lam0, delta
+        ),
+        out_specs=(P(), P(), P(), P("miners"), P("miners"), P("miners"), P(),
+                   P("miners"), P()),
+        check_vma=False,
+    )
+    lam0 = np.int32(start_sup)
+    out = jax.jit(shardy)(
+        init_occ, init_meta, init_sp,
+        db_bits, np.ascontiguousarray(db_bits.T), pos_mask_bits, thr,
+        lam0, np.float32(delta),
+    )
+    (g_hist, lam, t, stats, out_buf, out_ptr, g_sig, trace,
+     g_hist2d) = jax.tree.map(np.asarray, out)
+    # count the root closed set (clo of the empty itemset), support = N
+    g_hist = g_hist.copy()
+    if root_sup >= start_sup:
+        g_hist[root_sup] += 1
+        if mode == "lamp1":
+            # replay the lambda recursion including the root contribution
+            cs = np.cumsum(g_hist[::-1])[::-1]
+            cond = cs > thr
+            best = int(np.max(np.where(cond, np.arange(len(g_hist)), 0)))
+            lam = max(int(lam), best + 1, 1)
+
+    stats_dict = {name: stats[:, i] for i, name in enumerate(STAT_NAMES)}
+    if np.any(stats_dict["overflow"]):
+        raise RuntimeError("stack overflow in engine: increase stack_cap/push_cap")
+    if int(t) >= cfg.max_steps:
+        raise RuntimeError("engine hit max_steps before termination")
+
+    sig_sup = sig_pos = None
+    n_sig = int(g_sig)
+    if mode == "test":
+        bufs, ptrs = out_buf, out_ptr.reshape(-1)
+        rows = [bufs[p, : int(ptrs[p])] for p in range(n_proc)]
+        allrows = np.concatenate(rows, axis=0) if rows else np.zeros((0, 2), np.int32)
+        sig_sup, sig_pos = allrows[:, 0], allrows[:, 1]
+        # root significance (host-side, same test as on device)
+        if root_sup >= start_sup and labels is not None:
+            from .fisher import fisher_pvalue
+
+            p_root = fisher_pvalue(root_sup, n_pos, n, n_pos)[0]
+            if p_root <= delta:
+                n_sig += 1
+
+    hist2d = None
+    if mode == "count2d":
+        hist2d = g_hist2d.reshape(n + 1, n_pos + 1).copy()
+        if root_sup >= start_sup:
+            hist2d[root_sup if root_sup <= n else n, n_pos] += 1
+    return MineOutput(
+        hist=g_hist,
+        lam_final=int(lam),
+        supersteps=int(t),
+        stats=stats_dict,
+        sig_count=n_sig,
+        sig_sup=sig_sup,
+        sig_pos_sup=sig_pos,
+        trace=trace if cfg.trace_cap else None,
+        hist2d=hist2d,
+    )
+
+
+def lamp_distributed(
+    db_bool: np.ndarray,
+    labels: np.ndarray,
+    alpha: float = 0.05,
+    cfg: EngineConfig = EngineConfig(),
+    devices=None,
+    fuse_phase23: bool = False,
+):
+    """Full distributed LAMP (paper §3.3 + §4). Returns a dict.
+
+    fuse_phase23=True (beyond-paper, EXPERIMENTS.md §Perf): one enumeration
+    pass builds a 2-D (support x pos-support) histogram; P-values depend only
+    on that pair, so the correction factor AND the significant count both fall
+    out of the histogram — the third engine pass disappears entirely.
+    """
+    # phase 1: support increase -> lambda_final, min_sup
+    p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
+    min_sup = max(p1.lam_final - 1, 1)
+
+    if fuse_phase23:
+        n = db_bool.shape[0]
+        n_pos = int(np.asarray(labels, bool).sum())
+        p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, cfg=cfg,
+                  devices=devices)
+        h2 = p2.hist2d
+        sups_grid = np.arange(n + 1)
+        mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
+        k = int(h2[mask].sum())
+        delta = alpha / max(k, 1)
+        xs, ns = np.nonzero(mask)
+        from .fisher import fisher_pvalue
+
+        pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
+        sig_mask = pv <= delta
+        n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
+        return {
+            "lambda_final": p1.lam_final,
+            "min_sup": min_sup,
+            "correction_factor": k,
+            "delta": delta,
+            "n_significant": n_sig,
+            "phase_outputs": (p1, p2),
+        }
+
+    # phase 2: exact closed-set count at min_sup
+    p2 = mine(db_bool, labels, mode="count", min_sup=min_sup, cfg=cfg, devices=devices)
+    k = int(p2.hist[min_sup:].sum())
+    delta = alpha / max(k, 1)
+    # phase 3: significance testing at delta
+    p3 = mine(
+        db_bool, labels, mode="test", min_sup=min_sup, delta=delta,
+        cfg=cfg, devices=devices,
+    )
+    return {
+        "lambda_final": p1.lam_final,
+        "min_sup": min_sup,
+        "correction_factor": k,
+        "delta": delta,
+        "n_significant": p3.sig_count,
+        "phase_outputs": (p1, p2, p3),
+    }

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention, forward.
+
+Used on the serving/prefill hot path (32k-token prefill shapes) where the
+naive [S, S] score matrix would not fit HBM, let alone VMEM.  The kernel
+streams KV blocks through VMEM while the query block and the online-softmax
+state (running max m, normalizer l, accumulator acc) stay resident — the
+classic flash schedule, re-tiled for (8, 128) vregs and the MXU:
+
+  grid = (B*H, Sq/bq, Skv/bk)   KV axis innermost
+  q block   [bq, D]   VMEM (revisited across the KV sweep)
+  k,v block [bk, D]   VMEM (streamed)
+  scratch   m [bq,1], l [bq,1], acc [bq, D]  f32 VMEM
+
+Causal blocks strictly above the diagonal band are skipped with pl.when —
+on TPU this avoids both the MXU work and the VMEM traffic for masked blocks.
+Training uses the differentiable chunked-scan path in repro.models.layers;
+this kernel is the inference-prefill fast path (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, kv_len: int, q_offset: int,
+    block_q: int, block_k: int, num_k_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset  # global position of first query row
+    k_start = ki * block_k
+
+    # entire block strictly above the causal diagonal? -> skip all work
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    else:
+        needed = ki >= 0  # always true (traced)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0].astype(jnp.float32)  # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+
+        kv_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_ids < kv_len
+        if causal:
+            q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = mask & (kv_ids <= q_ids)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # every q row sees at least one valid key in its first unskipped block
+        # (causal: key 0 is always visible), so m_new is finite for real rows
+        # and masked entries vanish via exp(_NEG_INF - m_new) == 0.
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, scale: float | None = None,
+    kv_len: int | None = None, q_offset: int = 0,
+    block_q: int = 128, block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [BH, Sq, D], k/v [BH, Skv, D] -> [BH, Sq, D].
+
+    Sq/Skv must be multiples of block_q/block_k (ops.py pads); kv_len masks the
+    padded tail.  q_offset: global position of q row 0 (Skv - Sq for the usual
+    causal prefill-with-cache layout).
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = skv
+    nq, nk = sq // block_q, skv // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, kv_len=kv_len, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,62 @@
+"""jit'd public wrapper for flash attention (padding, GQA head mapping)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _pad_seq(x: jax.Array, multiple: int) -> jax.Array:
+    s = x.shape[1]
+    rem = (-s) % multiple
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, rem), (0, 0)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "impl", "interpret"),
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, scale: float | None = None,
+    block_q: int = 128, block_k: int = 128,
+    impl: str = "pallas", interpret: bool = False,
+) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q [B, Hq, Sq, D]; k, v [B, Hkv, Skv, D]; Hq % Hkv == 0.
+    Returns [B, Hq, Sq, D].
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if group > 1:  # expand kv heads to match q heads (wrapper-level GQA)
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, skv, d)
+    vf = v.reshape(b * hq, skv, d)
+    q_offset = skv - sq if causal else 0
+
+    if impl == "ref":
+        out = attention_ref(qf, kf, vf, causal=causal, scale=scale, q_offset=q_offset)
+        return out.reshape(b, hq, sq, d)
+
+    qp = _pad_seq(qf, block_q)
+    kp = _pad_seq(kf, block_k)
+    vp = _pad_seq(vf, block_k)
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, scale=scale, kv_len=skv, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :sq].reshape(b, hq, sq, d)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (naive full-matrix softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, scale: float | None = None,
+    kv_len: int | None = None, q_offset: int = 0,
+) -> jax.Array:
+    """q [BH, Sq, D], k/v [BH, Skv, D] -> [BH, Sq, D] in f32 accumulation."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = skv
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    kv_ids = jnp.arange(skv)[None, None, :]
+    mask = kv_ids < kv_len
+    if causal:
+        q_ids = (jnp.arange(sq) + q_offset)[None, :, None]
+        mask = mask & (kv_ids <= q_ids)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""jit'd public wrapper for the support-count kernel (padding + layout)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import support_count_pallas
+from .ref import support_count_ref
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)  # zero words: AND contributes nothing
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_m", "block_w", "impl", "interpret")
+)
+def support_counts(
+    occ: jax.Array,
+    db_t: jax.Array,
+    *,
+    block_b: int = 8,
+    block_m: int = 512,
+    block_w: int = 32,
+    impl: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """Support of every item-extension of every node: [B, W] x [W, M] -> [B, M].
+
+    Zero-pads every axis to its block multiple (bit-safe: padded words are 0,
+    so they contribute no counts) and slices the result back.
+    impl: "pallas" (TPU target; interpret=True on CPU) or "ref" (pure jnp).
+    """
+    b, w = occ.shape
+    _, m = db_t.shape
+    if impl == "ref":
+        return support_count_ref(occ, db_t)
+    block_b = min(block_b, max(8, b))
+    occ_p = _pad_to(_pad_to(occ, 0, block_b), 1, block_w)
+    db_p = _pad_to(_pad_to(db_t, 0, block_w), 1, block_m)
+    out = support_count_pallas(
+        occ_p, db_p,
+        block_b=block_b, block_m=block_m, block_w=block_w,
+        interpret=interpret,
+    )
+    return out[:b, :m]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the support-count kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def support_count_ref(occ: jax.Array, db_t: jax.Array) -> jax.Array:
+    """occ [B, W] uint32, db_t [W, M] uint32 -> [B, M] int32."""
+    inter = occ[:, :, None] & db_t[None, :, :]  # [B, W, M]
+    return jnp.sum(jax.lax.population_count(inter), axis=1).astype(jnp.int32)

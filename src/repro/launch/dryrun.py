@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers, SPMD-partitions, and compiles on the production mesh, and extract the
+roofline raw terms from the compiled artifact.
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init); nothing else in the repo sets it globally.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every valid cell, both meshes
+  python -m repro.launch.dryrun --all --mesh multi
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>.json
+(memory_analysis, cost_analysis, parsed HLO flops/bytes/collectives, timings).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config
+from repro.launch.hlo_cost import parse_hlo_costs
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.launch.steps import (
+    abstract_opt_state, batch_specs, build_decode_step, build_prefill_step,
+    build_train_step, opt_specs, sanitize_specs,
+)
+from repro.models import nn as _nn
+from repro.models.sharding import use_rules
+from repro.models.transformer import (
+    abstract_cache, abstract_params, cache_partition_specs, param_partition_specs,
+)
+from repro.optim.adamw import AdamWConfig
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _bf16_params(aparams):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+        ),
+        aparams,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower + compile one cell; returns the record dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(multi_pod=multi_pod, decode=shape.kind == "decode")
+    if cfg.pure_dp and shape.kind != "decode":
+        from repro.models.sharding import ShardingRules
+
+        rules = ShardingRules(dp=tuple(mesh.axis_names), tp=None, fsdp=None,
+                              sp=None)
+    t0 = time.time()
+
+    with mesh, use_rules(rules):
+        pspecs = param_partition_specs(cfg)
+        aparams = abstract_params(cfg)
+        pspecs = sanitize_specs(pspecs, aparams, mesh)
+        batch, bspecs = batch_specs(cfg, shape, rules)
+        bspecs = sanitize_specs(bspecs, batch, mesh)
+
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            aopt = abstract_opt_state(opt_cfg, aparams)
+            step = build_train_step(cfg, opt_cfg)
+            in_shardings = (
+                _named(mesh, pspecs), _named(mesh, opt_specs(pspecs)),
+                _named(mesh, bspecs),
+            )
+            jitted = jax.jit(
+                step, in_shardings=in_shardings,
+                out_shardings=(in_shardings[0], in_shardings[1], None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(aparams, aopt, batch)
+        elif shape.kind == "prefill":
+            sparams = _bf16_params(aparams)
+            step = build_prefill_step(cfg)
+            if "decode_32k" in cfg.supported_shapes:
+                acache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+                cspecs = sanitize_specs(
+                    cache_partition_specs(cfg, acache), acache, mesh)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs),
+                                  _named(mesh, cspecs)),
+                    donate_argnums=(2,),
+                )
+                lowered = jitted.lower(sparams, batch, acache)
+            else:  # encoder-only forward
+                jitted = jax.jit(
+                    lambda p, b: step(p, b, None),
+                    in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                )
+                lowered = jitted.lower(sparams, batch)
+        else:  # decode
+            sparams = _bf16_params(aparams)
+            step = build_decode_step(cfg)
+            acache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            dp_size = 1
+            for ax_ in rules.dp:
+                dp_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax_]
+            dp_divides = shape.global_batch % dp_size == 0
+            cspecs = cache_partition_specs(cfg, acache, dp_divides=dp_divides)
+            cspecs = sanitize_specs(cspecs, acache, mesh)
+            dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    _named(mesh, pspecs),
+                    NamedSharding(mesh, P(dp if dp_divides else None, None)),
+                    _named(mesh, cspecs),
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(sparams, tokens, acache)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        parsed = parse_hlo_costs(hlo)
+
+    n_params = _nn.count_params(aparams)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "n_params": n_params,
+        "n_active_params": cfg.n_active_params(),
+        "grad_accum": cfg.grad_accum if shape.kind == "train" else 1,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        },
+        "xla_cost": {k: v for k, v in cost.items() if isinstance(v, (int, float))},
+        "hlo_parsed": parsed,
+        "collective_op_counts": {
+            op: hlo.count(f" {op}(") + hlo.count(f" {op}-start(")
+            for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                       "collective-permute")
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return record, hlo
+
+
+def valid_cells():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape_name in cfg.supported_shapes:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute existing records")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = list(valid_cells()) if args.all else [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[cell] {tag} ...", flush=True)
+            try:
+                rec, hlo = lower_cell(arch, shape_name, multi)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                import gzip
+
+                hlo_dir = os.path.join(args.out, "hlo")
+                os.makedirs(hlo_dir, exist_ok=True)
+                with gzip.open(os.path.join(hlo_dir, tag + ".txt.gz"), "wt") as f:
+                    f.write(hlo)
+                print(
+                    f"  ok: mem/dev={rec['memory']['per_device_total']/2**30:.2f} GiB"
+                    f" flops/dev={rec['hlo_parsed']['flops']:.3e}"
+                    f" coll={rec['hlo_parsed']['coll_link_bytes']:.3e}B"
+                    f" compile={rec['compile_s']}s",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"  FAIL: {e}\n{traceback.format_exc()[-2000:]}", flush=True)
+
+    print(f"\n{len(cells)*len(meshes) - len(failures)} ok, {len(failures)} failed")
+    for tag, err in failures:
+        print(f"  FAILED {tag}: {err[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's device-count
+override to work (launch/dryrun.py sets XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..models.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(*, multi_pod: bool = False, decode: bool = False) -> ShardingRules:
+    """Logical->mesh axis rules matching the production mesh.
+
+    Sequence parallelism (sp) shards the residual stream over 'model' between
+    blocks during training; decode uses 'model' for the KV-cache sequence dim
+    (flash-decode style partial-softmax sharding).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        dp=dp, tp="model", fsdp="data", sp="model", shard_kv_seq=True
+    )
+
+
+def make_mining_mesh(devices=None):
+    """1-D mesh over all devices for the pattern-mining engine."""
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    return jax.sharding.Mesh(np.array(devices), ("miners",))

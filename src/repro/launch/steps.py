@@ -1,0 +1,167 @@
+"""jit-able train/serve steps with full sharding annotations.
+
+These are the exact programs the dry-run lowers and the trainers run:
+
+  train_step(params, opt_state, batch)          -> params', opt', metrics
+  prefill_step(params, batch, cache)            -> last_logits, cache'
+  decode_step(params, tokens, cache)            -> logits, cache'
+
+Microbatching (grad accumulation) expects the batch pre-shaped
+[accum, micro, ...] with the micro axis sharded over dp — no resharding
+reshape inside the step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, RunShape
+from ..models.sharding import ShardingRules, use_rules
+from ..models.transformer import (
+    abstract_cache, abstract_params, cache_partition_specs, forward_decode,
+    forward_prefill, forward_train, param_partition_specs,
+)
+from ..optim.adamw import AdamWConfig, apply_updates, init_state
+
+F32 = jnp.float32
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    accum = cfg.grad_accum
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            # mixed precision at the step boundary: parameters are cast to
+            # bf16 BEFORE use, so every FSDP all-gather moves bf16, and the
+            # weight-gradient all-reduces run in bf16 too (the cast-backward
+            # converts to f32 after the reduction).  f32 master weights and
+            # optimizer state are untouched.  (§Perf it1: halves the dominant
+            # collective term.)
+            if cfg.dtype == "bf16":
+                from ..models import nn as _nn
+
+                p = _nn.cast_tree(p, jnp.bfloat16)
+            return forward_train(p, cfg, mb)
+
+        if accum == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        else:
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, F32), params)
+
+            def mstep(carry, mb):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(F32), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            (loss, grads), _ = lax.scan(mstep, (jnp.float32(0.0), zeros), batch)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        new_params, new_opt, metrics = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch, cache):
+        return forward_prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    def decode_step(params, tokens, cache):
+        return forward_decode(params, cfg, tokens, cache)
+
+    return decode_step
+
+
+# ----------------------------------------------------------------- input specs
+def batch_specs(cfg: ArchConfig, shape: RunShape, rules: ShardingRules):
+    """ShapeDtypeStructs + PartitionSpecs for a run shape's inputs.
+
+    Returns (abstract_batch, batch_pspecs) for train/prefill; decode adds the
+    cache separately (see dryrun.py).
+    """
+    s, gb = shape.seq_len, shape.global_batch
+    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    emb = cfg.embed_inputs and shape.kind != "decode"
+    pos_shape = (gb, s, 3) if cfg.m_rope_sections else (gb, s)
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        a = cfg.grad_accum
+        assert gb % a == 0
+        mb = gb // a
+
+        def lead(shp):
+            return (a, mb) + shp[1:]
+
+        batch = {
+            "inputs": sds(lead((gb, s, cfg.d_model)), jnp.bfloat16) if emb
+            else sds(lead((gb, s)), jnp.int32),
+            "labels": sds(lead((gb, s)), jnp.int32),
+            "positions": sds(lead(pos_shape), jnp.int32),
+        }
+        specs = jax.tree.map(
+            lambda x: P(*((None, dp) + (None,) * (len(x.shape) - 2))), batch
+        )
+        return batch, specs
+
+    batch = {
+        "inputs": sds((gb, s, cfg.d_model), jnp.bfloat16) if emb
+        else sds((gb, s), jnp.int32),
+        "labels": sds((gb, s), jnp.int32),
+        "positions": sds(pos_shape, jnp.int32),
+    }
+    specs = jax.tree.map(lambda x: P(*((dp,) + (None,) * (len(x.shape) - 1))), batch)
+    return batch, specs
+
+
+def opt_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def sanitize_specs(spec_tree, abstract_tree, mesh):
+    """Drop mesh axes from dims they don't divide (pjit input shardings must
+    divide exactly; e.g. hubert's vocab=504 vs the 16-way 'model' axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ax_size(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for e in entry:
+                n *= sizes[e]
+            return n
+        return sizes[entry]
+
+    def fix(s, a):
+        if not isinstance(s, P):
+            return s
+        entries = tuple(s) + (None,) * (len(a.shape) - len(tuple(s)))
+        out = tuple(
+            e if (e is None or dim % ax_size(e) == 0) else None
+            for e, dim in zip(entries, a.shape)
+        )
+        return P(*out)
+
+    return jax.tree.map(
+        fix, spec_tree, abstract_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def abstract_opt_state(opt_cfg: AdamWConfig, aparams):
+    return jax.eval_shape(lambda p: init_state(opt_cfg, p), aparams)

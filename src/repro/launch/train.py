@@ -1,0 +1,118 @@
+"""Training launcher: fault-tolerant loop around build_train_step.
+
+  python -m repro.launch.train --arch xlstm-125m --preset tiny --steps 50
+
+Features exercised even at CPU scale:
+  * checkpoint every --ckpt-every steps; automatic restore-on-start
+  * deterministic data replay from the restored step (data/pipeline.py)
+  * --fail-at N simulates a node failure (process aborts mid-run); a rerun
+    with the same --ckpt-dir resumes and converges to the same trajectory
+  * on a real pod slice the same script runs under jax.distributed with the
+    production mesh (see launch/dryrun.py for the mesh/sharding wiring)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt import checkpoint as ckpt
+from ..configs import ALL_ARCHS, get_config
+from ..data.pipeline import DataConfig, make_batch
+from ..models.transformer import init_params
+from ..optim.adamw import AdamWConfig, init_state
+from .steps import build_train_step
+
+
+def make_train_setup(cfg, opt_cfg, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_state(opt_cfg, params)
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    return params, opt_state, step_fn
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list(ALL_ARCHS))
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, default=0, help="simulate failure at step N")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    base = get_config(args.arch)
+    if args.preset == "full":
+        cfg = base
+    elif args.preset == "reduced":
+        cfg = base.reduced()
+    else:  # tiny: fast convergence demo on 1 CPU core
+        cfg = dataclasses.replace(
+            base.reduced(), vocab=512, d_model=128, d_ff=256 if base.d_ff else 0,
+            n_heads=4, head_dim=32,
+        )
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps, compress=args.compress_grads)
+    params, opt_state, step_fn = make_train_setup(cfg, opt_cfg)
+
+    dcfg = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        grad_accum=cfg.grad_accum, m_rope=bool(cfg.m_rope_sections),
+        embed_inputs=cfg.embed_inputs, d_model=cfg.d_model,
+    )
+
+    start_step = 0
+    if args.ckpt_dir:
+        restored, manifest = ckpt.restore_latest(
+            args.ckpt_dir, {"params": params, "opt": opt_state}
+        )
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = manifest["step"]
+            print(f"[restore] resumed from step {start_step}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = make_batch(dcfg, step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append({"step": step, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"])})
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss:8.4f}  gnorm "
+                  f"{float(metrics['grad_norm']):7.3f}  {time.time()-t0:6.1f}s",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save({"params": params, "opt": opt_state}, args.ckpt_dir,
+                      step + 1, meta={"arch": cfg.name})
+        if args.fail_at and step + 1 == args.fail_at:
+            print(f"[fault-injection] simulated node failure at step {step + 1}",
+                  flush=True)
+            os._exit(42)
+
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(losses, f)
+    print(f"final loss {losses[-1]['loss']:.4f} (first {losses[0]['loss']:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    run()

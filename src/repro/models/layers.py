@@ -1,0 +1,251 @@
+"""Transformer building blocks: RMSNorm, RoPE / M-RoPE, GQA attention
+(differentiable chunked online-softmax), sliding-window attention, MLP
+variants, capacity-based MoE.
+
+All matmuls run in bf16 with f32 accumulation (preferred_element_type);
+norms and softmax statistics in f32.  Activation sharding constraints go
+through models.sharding.shard — no-ops outside a mesh context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import nn
+from .sharding import shard
+
+F32 = jnp.float32
+_NEG = -1e30
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * lax.rsqrt(var + eps)) * w.astype(F32)).astype(x.dtype)
+
+
+def dot(x, w):
+    """Matmul in the activation dtype.
+
+    No preferred_element_type=f32 + downcast here: that poisons the backward
+    pass with f32 gradient operands (2x collective payload and MXU flops —
+    EXPERIMENTS.md §Perf, cmd-r+ iteration 3).  TPU MXUs accumulate bf16
+    products in f32 internally; explicit f32 accumulation is reserved for
+    softmax logits and the CE loss.
+    """
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------- RoPE / M-RoPE
+def rope_inv_freq(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=F32) / head_dim)
+
+
+def apply_rope(x, positions, theta, m_rope_sections=()):
+    """x [B, H, S, D]; positions [B, S] (or [B, S, 3] with M-RoPE sections).
+
+    M-RoPE (Qwen2-VL): the D/2 frequency slots are split into (t, h, w)
+    sections; each slot rotates by its section's position component.
+    """
+    b, h, s, d = x.shape
+    inv = rope_inv_freq(d, theta)  # [D/2]
+    if m_rope_sections:
+        assert sum(m_rope_sections) == d // 2, (m_rope_sections, d)
+        sec_id = jnp.repeat(
+            jnp.arange(len(m_rope_sections)), jnp.array(m_rope_sections),
+            total_repeat_length=d // 2,
+        )
+        if positions.ndim == 2:  # text-only stream: t == h == w
+            positions = positions[..., None].repeat(3, axis=-1)
+        pos = jnp.take_along_axis(
+            positions.astype(F32), sec_id[None, None, :].repeat(s, 1).repeat(b, 0), axis=2
+        )  # [B, S, D/2]
+    else:
+        pos = positions.astype(F32)[..., None]  # [B, S, 1]
+    ang = pos * inv  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------ chunked GQA attention
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_offset=0,
+              kv_pos=None, chunk=1024, scale=None, softcap=0.0):
+    """GQA attention, memory-O(chunk) in KV length, differentiable.
+
+    q [B, Hq, Sq, D]; k, v [B, Hkv, Skv, D].  q_offset: global position of
+    q[…,0] (scalar or [B]); kv positions are either contiguous from kv_offset
+    or given explicitly via kv_pos [B, Skv] (ring-buffer caches; slots with
+    negative positions are masked out).  Returns [B, Hq, Sq, D].
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d)
+    q_offset = jnp.asarray(q_offset)
+    q_pos = q_offset.reshape(-1, 1) + jnp.arange(sq)[None, :]  # [B or 1, Sq]
+    q_pos = jnp.broadcast_to(q_pos, (b, sq))
+
+    if kv_pos is None:
+        kv_pos = kv_offset + jnp.arange(skv)[None, :]
+        kv_pos = jnp.broadcast_to(kv_pos, (b, skv))
+
+    if sq == 1:
+        # decode fast path: one masked softmax over the (possibly seq-sharded)
+        # cache — GSPMD turns the S-axis reductions into partial-softmax psums
+        # (flash-decoding); no scan, so the sharded S axis is never gathered.
+        # NB: contract in the cache dtype with f32 accumulation — an explicit
+        # .astype(f32) on k/v gets hoisted out of the layer scan by XLA and
+        # materializes the whole stacked cache in f32.
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, k.astype(qg.dtype),
+                       preferred_element_type=F32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kk = kv_pos[:, None, None, None, :]
+        qp = q_pos[:, None, None, :, None]
+        mask = kk >= 0
+        if causal:
+            mask = mask & (kk <= qp)
+        if window > 0:
+            mask = mask & (kk > qp - window)
+        s = jnp.where(mask, s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqc,bhcd->bhgqd", p.astype(v.dtype), v,
+                         preferred_element_type=F32)
+        return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+    chunkc = min(chunk, skv)
+    pad = (-skv) % chunkc
+    if pad:  # pad KV to a chunk multiple; padded slots get position -1 -> masked
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nc = k.shape[2] // chunkc
+    ks = k.reshape(b, hkv, nc, chunkc, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nc, chunkc, d).transpose(2, 0, 1, 3, 4)
+    pos_c = kv_pos.reshape(b, nc, chunkc).transpose(1, 0, 2)  # [nc, B, C]
+
+    def step(carry, xs):
+        k_c, v_c, p_c = xs  # [B,Hkv,C,D], [B,C]
+        m_prev, l_prev, acc = carry
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, k_c.astype(qg.dtype),
+                       preferred_element_type=F32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kk = p_c[:, None, None, None, :]  # [B,1,1,1,C]
+        qp = q_pos[:, None, None, :, None]  # [B,1,1,Sq,1]
+        mask = kk >= 0
+        if causal:
+            mask = mask & (kk <= qp)
+        if window > 0:
+            mask = mask & (kk > qp - window)
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqc,bhcd->bhgqd", p.astype(v_c.dtype), v_c,
+                        preferred_element_type=F32)
+        return (m_new, l_new, alpha[..., None] * acc + pv), None
+
+    m0 = jnp.full((b, hkv, g, sq), _NEG, F32)
+    l0 = jnp.zeros((b, hkv, g, sq), F32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), F32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (ks, vs, pos_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------- MLP variants
+def mlp_init(key, d, f, kind):
+    ks = nn.split_keys(key, ["in", "gate", "out"])
+    p = {"w_in": nn.dense_init(ks["in"], (d, f)), "w_out": nn.dense_init(ks["out"], (f, d))}
+    if kind == "swiglu":
+        p["w_gate"] = nn.dense_init(ks["gate"], (d, f))
+    return p
+
+
+def mlp_apply(p, x, kind):
+    h = dot(x, p["w_in"])
+    if kind == "swiglu":
+        h = jax.nn.silu(dot(x, p["w_gate"]).astype(F32)).astype(x.dtype) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h.astype(F32))).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    h = shard(h, "dp", None, "tp")
+    return dot(h, p["w_out"])
+
+
+# ----------------------------------------------------------------------- MoE
+def moe_init(key, d, f, n_experts, kind):
+    ks = nn.split_keys(key, ["router", "in", "gate", "out"])
+    p = {
+        "router": nn.dense_init(ks["router"], (d, n_experts)),
+        "w_in": nn.dense_init(ks["in"], (n_experts, d, f), in_axis=1),
+        "w_out": nn.dense_init(ks["out"], (n_experts, f, d), in_axis=1),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = nn.dense_init(ks["gate"], (n_experts, d, f), in_axis=1)
+    return p
+
+
+def moe_apply(p, x, *, top_k, kind, capacity_factor=1.25, seq_chunk=512):
+    """Capacity-based top-k MoE (GShard-style dispatch), seq-chunked so the
+    dispatch one-hot stays O(chunk * E * C) instead of O(S * E * C).
+
+    x [B, S, d] -> [B, S, d].  Over-capacity tokens are dropped (standard).
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    seq_chunk = min(seq_chunk, s)
+    pad = (-s) % seq_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    ns = x.shape[1] // seq_chunk
+    cap = max(int(seq_chunk * top_k * capacity_factor / e), 4)
+
+    def chunk_fn(x_c):
+        # x_c [B, C_s, d]
+        logits = dot(x_c, p["router"]).astype(F32)  # [B, Cs, E]
+        gate_all = jax.nn.softmax(logits, axis=-1)
+        gates, ids = lax.top_k(gate_all, top_k)  # [B, Cs, K]
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(ids, e, dtype=F32)  # [B, Cs, K, E]
+        # position of each (token, k) within its expert, over the chunk
+        pos = jnp.cumsum(onehot.reshape(b, -1, e), axis=1).reshape(b, seq_chunk, top_k, e)
+        pos = (pos - 1) * onehot  # zero where not routed
+        keep = (pos < cap) * onehot  # drop over-capacity
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=F32) * keep[..., None]
+        # dispatch [B, Cs, K, E, cap] -> combine over (Cs)
+        disp = pos_oh  # [B, Cs, K, E, cap]
+        xin = jnp.einsum("bskec,bsd->becd", disp, x_c.astype(F32)).astype(x_c.dtype)
+        xin = shard(xin, "dp", "tp", None, None)
+        h = jnp.einsum("becd,edf->becf", xin, p["w_in"].astype(xin.dtype),
+                       preferred_element_type=F32).astype(xin.dtype)
+        if kind == "swiglu":
+            g = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(xin.dtype),
+                           preferred_element_type=F32)
+            h = jax.nn.silu(g).astype(h.dtype) * h
+        else:
+            h = jax.nn.gelu(h.astype(F32)).astype(h.dtype)
+        y_e = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(h.dtype),
+                         preferred_element_type=F32)  # [B, E, cap, d] f32
+        comb = disp * gates[..., None, None]  # [B, Cs, K, E, cap]
+        y = jnp.einsum("bskec,becd->bsd", comb, y_e)
+        return y.astype(x_c.dtype)
+
+    xs = x.reshape(b, ns, seq_chunk, d).transpose(1, 0, 2, 3)
+    ys = lax.map(chunk_fn, xs)  # scan keeps dispatch memory O(chunk)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, ns * seq_chunk, d)
+    return y[:, :s]

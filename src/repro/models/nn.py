@@ -1,0 +1,45 @@
+"""Minimal pytree parameter system (no flax): init fns return nested dicts of
+f32 arrays; `abstract_init` gives allocation-free ShapeDtypeStructs for the
+dry-run; spec trees mirror params for NamedSharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if shape else 1
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def abstract_init(init_fn, *args):
+    """Shapes/dtypes of init_fn(key, *args) without allocating (dry-run path)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_fn(k, *args), key)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,330 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM, sLSTM).
+
+Training-time parallelism choices (DESIGN.md hardware-adaptation notes):
+  * RG-LRU: elementwise linear recurrence -> jax.lax.associative_scan (TPU log-
+    depth scan) — the canonical way to run Griffin on TPUs.
+  * mLSTM : matrix-memory recurrence trained in the *chunkwise-parallel* form
+    (state carried across chunks, quadratic within a chunk).  A step-by-step
+    recurrence (`mlstm_step`) is the decode path AND the test oracle.
+  * sLSTM : sequential by construction (h_{t-1} feeds the gates; the xLSTM
+    paper states it cannot be parallelized) -> lax.scan over time with
+    x-projections hoisted out of the loop.  Carried state is O(d) so reverse-
+    mode memory stays linear and small.
+
+All recurrent states are f32; stabilizers keep exp() arguments <= 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import nn
+from .layers import dot, rms_norm
+from .sharding import shard
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------ causal conv1d
+def conv1d_init(key, width, channels):
+    return {"w": nn.dense_init(key, (width, channels)) , "b": jnp.zeros((channels,))}
+
+
+def conv1d_apply(p, x, state=None):
+    """Depthwise causal conv along time. x [B, S, C]; state [B, width-1, C].
+
+    Returns (y, new_state). With state=None the left context is zeros (train).
+    """
+    width = p["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * p["w"][width - 1 - i].astype(x.dtype)
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else state
+    return y + p["b"].astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------- RG-LRU
+_RG_C = 8.0
+_RG_BLOCKS = 8  # block-diagonal gate projections (Griffin appendix)
+
+
+def rglru_init(key, d, w, conv_width):
+    ks = nn.split_keys(key, ["x", "gate", "out", "conv", "wa", "wi", "lam"])
+    bd = w // _RG_BLOCKS
+    return {
+        "w_x": nn.dense_init(ks["x"], (d, w)),
+        "w_gate": nn.dense_init(ks["gate"], (d, w)),
+        "w_out": nn.dense_init(ks["out"], (w, d)),
+        "conv": conv1d_init(ks["conv"], conv_width, w),
+        "w_a": nn.dense_init(ks["wa"], (_RG_BLOCKS, bd, bd), in_axis=1),
+        "w_i": nn.dense_init(ks["wi"], (_RG_BLOCKS, bd, bd), in_axis=1),
+        # softplus(lam_p) ~ 0.4..0.8 at init => a^c in the Griffin range
+        "lam": jnp.full((w,), 0.56, F32),
+    }
+
+
+def _block_diag(x, w):
+    b, s, c = x.shape
+    nb, bd, _ = w.shape
+    xb = x.reshape(b, s, nb, bd)
+    return jnp.einsum("bsnk,nkj->bsnj", xb.astype(F32), w.astype(F32)).reshape(b, s, c)
+
+
+def rglru_block(p, x, state=None):
+    """Griffin recurrent block. x [B, S, d] -> [B, S, d].
+
+    state: {"h": [B, w] f32, "conv": [B, cw-1, w]} for decode; None for train.
+    """
+    gate = jax.nn.gelu(dot(x, p["w_gate"]).astype(F32))
+    u, conv_state = conv1d_apply(
+        p["conv"], dot(x, p["w_x"]), None if state is None else state["conv"]
+    )
+    u = shard(u, "dp", None, "tp")
+    r = jax.nn.sigmoid(_block_diag(u, p["w_a"]))
+    i = jax.nn.sigmoid(_block_diag(u, p["w_i"]))
+    log_a = -_RG_C * jax.nn.softplus(p["lam"].astype(F32)) * r  # [B,S,w] <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b_term = beta * (i * u.astype(F32))
+
+    if state is not None:  # fold the carried state into the first step
+        b_term = b_term.at[:, 0].add(a[:, 0] * state["h"])
+    if x.shape[1] == 1:  # decode fast path
+        h = b_term
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = lax.associative_scan(combine, (a, b_term), axis=1)
+    new_h = h[:, -1]
+
+    y = dot((gate * h).astype(x.dtype), p["w_out"])
+    return y, {"h": new_h, "conv": conv_state}
+
+
+# -------------------------------------------------------------------- mLSTM
+def mlstm_init(key, d, n_heads, conv_width=4):
+    up = 2 * d
+    ks = nn.split_keys(key, ["up", "gate", "q", "k", "v", "if_", "conv", "down", "norm"])
+    return {
+        "w_up": nn.dense_init(ks["up"], (d, up)),
+        "w_ogate": nn.dense_init(ks["gate"], (d, up)),
+        "conv": conv1d_init(ks["conv"], conv_width, up),
+        "w_q": nn.dense_init(ks["q"], (up, up)),
+        "w_k": nn.dense_init(ks["k"], (up, up)),
+        "w_v": nn.dense_init(ks["v"], (up, up)),
+        "w_if": nn.dense_init(ks["if_"], (up, 2 * n_heads)),
+        "b_if": jnp.concatenate([jnp.zeros(n_heads), jnp.full((n_heads,), 3.0)]),
+        "norm": jnp.ones((up,)),
+        "w_down": nn.dense_init(ks["down"], (up, d)),
+    }
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """One recurrence step (decode path & test oracle).
+
+    q,k,v [B,H,dh]; i_raw,f_raw [B,H]; state (C [B,H,dh,dh], n [B,H,dh], m [B,H]).
+    """
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(f_raw.astype(F32))
+    logi = i_raw.astype(F32)
+    m_new = jnp.maximum(logf + m, logi)
+    fp = jnp.exp(logf + m - m_new)[..., None]
+    ip = jnp.exp(logi - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * (k[..., :, None] * v[..., None, :]).astype(F32)
+    n = fp * n + ip * k.astype(F32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(F32), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(F32), n))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return num / den, (C, n, m_new)
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, state=None, chunk=256):
+    """Chunkwise-parallel mLSTM: q,k,v [B,H,S,dh]; gates [B,H,S].
+
+    Returns (h [B,H,S,dh], final_state).  Matches scanning `mlstm_step` over
+    time (tests assert this).
+    """
+    b, h, s, dh = q.shape
+    if state is None:
+        state = (
+            jnp.zeros((b, h, dh, dh), F32),
+            jnp.zeros((b, h, dh), F32),
+            jnp.full((b, h), -1e30, F32),
+        )
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:  # pad with -inf input gates: padded steps contribute nothing
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, 0), (0, pad)), constant_values=30.0)
+    sp = q.shape[2]
+    nc = sp // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, h, nc, chunk, *t.shape[3:]).transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    qs, ks_, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    is_, fs = to_chunks(i_raw), to_chunks(f_raw)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = xs  # [B,H,L,dh], gates [B,H,L]
+        logf = jax.nn.log_sigmoid(fc.astype(F32))
+        logi = ic.astype(F32)
+        F = jnp.cumsum(logf, axis=-1)  # [B,H,L] inclusive decay from chunk start
+        # intra-chunk log-weights D[t,j] = F_t - F_j + logi_j  (j <= t)
+        D = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)  # [B,H,L]
+        m_t = jnp.maximum(m[..., None] + F, m_intra)
+        inter_w = jnp.exp(m[..., None] + F - m_t)  # [B,H,L]
+        wmat = jnp.exp(D - m_t[..., None])  # [B,H,L,L]
+        qf = qc.astype(F32)
+        qkT = jnp.einsum("bhld,bhjd->bhlj", qf, kc.astype(F32))
+        num = inter_w[..., None] * jnp.einsum("bhld,bhde->bhle", qf, C) + jnp.einsum(
+            "bhlj,bhlj,bhje->bhle", wmat, qkT, vc.astype(F32)
+        )
+        den = inter_w * jnp.einsum("bhld,bhd->bhl", qf, n) + jnp.einsum(
+            "bhlj,bhlj->bhl", wmat, qkT
+        )
+        hb = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        FL = F[..., -1:]
+        m_new = jnp.maximum(
+            m + FL[..., 0], jnp.max(FL - F + logi, axis=-1)
+        )
+        wk = jnp.exp(FL - F + logi - m_new[..., None])  # [B,H,L]
+        C_new = jnp.exp(m + FL[..., 0] - m_new)[..., None, None] * C + jnp.einsum(
+            "bhj,bhjd,bhje->bhde", wk, kc.astype(F32), vc.astype(F32)
+        )
+        n_new = jnp.exp(m + FL[..., 0] - m_new)[..., None] * n + jnp.einsum(
+            "bhj,bhjd->bhd", wk, kc.astype(F32)
+        )
+        return (C_new, n_new, m_new), hb
+
+    state, hs = lax.scan(chunk_step, state, (qs, ks_, vs, is_, fs))
+    hcat = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, sp, dh)
+    return hcat[:, :, :s], state
+
+
+def mlstm_block(p, x, n_heads, state=None, chunk=256):
+    """xLSTM mLSTM block. x [B, S, d] -> [B, S, d]. state for decode."""
+    b, s, d = x.shape
+    up = p["w_up"].shape[1]
+    dh = up // n_heads
+    xu = dot(x, p["w_up"])
+    ogate = jax.nn.silu(dot(x, p["w_ogate"]).astype(F32))
+    conv_in, conv_state = conv1d_apply(
+        p["conv"], xu, None if state is None else state["conv"]
+    )
+    conv_in = jax.nn.silu(conv_in.astype(F32)).astype(x.dtype)
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q = heads(dot(conv_in, p["w_q"])) * (dh ** -0.5)
+    k = heads(dot(conv_in, p["w_k"]))
+    v = heads(dot(xu, p["w_v"]))
+    gif = (dot(conv_in, p["w_if"]).astype(F32) + p["b_if"]).transpose(0, 2, 1)  # [B,2H,S]
+    i_raw, f_raw = gif[:, :n_heads], gif[:, n_heads:]
+
+    rec_state = None if state is None else state["rec"]
+    if state is None or s > 1:
+        h, rec_state = mlstm_chunked(q, k, v, i_raw, f_raw, rec_state, chunk=chunk)
+    else:
+        h1, rec_state = mlstm_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0], i_raw[:, :, 0], f_raw[:, :, 0], rec_state
+        )
+        h = h1[:, :, None]
+    hm = h.transpose(0, 2, 1, 3).reshape(b, s, up)
+    hm = rms_norm(hm.astype(x.dtype), p["norm"])
+    y = dot((hm.astype(F32) * ogate).astype(x.dtype), p["w_down"])
+    return y, {"rec": rec_state, "conv": conv_state}
+
+
+# -------------------------------------------------------------------- sLSTM
+def slstm_init(key, d, n_heads, conv_width=4, ff_ratio=4.0 / 3.0):
+    dh = d // n_heads
+    ff = int(d * ff_ratio)
+    ks = nn.split_keys(
+        key, ["conv", "wi", "wf", "wz", "wo", "ri", "rf", "rz", "ro", "up", "gate", "down", "norm"]
+    )
+    p = {
+        "conv": conv1d_init(ks["conv"], conv_width, d),
+        "norm": jnp.ones((d,)),
+        "w_up": nn.dense_init(ks["up"], (d, ff)),
+        "w_gate": nn.dense_init(ks["gate"], (d, ff)),
+        "w_down": nn.dense_init(ks["down"], (ff, d)),
+    }
+    for g in ("i", "f", "z", "o"):
+        p[f"w_{g}"] = nn.dense_init(ks[f"w{g}"], (d, d))
+        p[f"r_{g}"] = nn.dense_init(ks[f"r{g}"], (n_heads, dh, dh), in_axis=1)
+    p["b_f"] = jnp.full((d,), 3.0)  # forget-gate bias: remember by default
+    return p
+
+
+def slstm_block(p, x, n_heads, state=None):
+    """xLSTM sLSTM block (sequential scan). x [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    conv_x, conv_state = conv1d_apply(
+        p["conv"], x, None if state is None else state["conv"]
+    )
+    conv_x = jax.nn.silu(conv_x.astype(F32)).astype(x.dtype)
+    # hoist the x-projections out of the scan
+    xi = dot(conv_x, p["w_i"]).astype(F32)
+    xf = (dot(conv_x, p["w_f"]).astype(F32) + p["b_f"])
+    xz = dot(x, p["w_z"]).astype(F32)
+    xo = dot(x, p["w_o"]).astype(F32)
+
+    def hview(t):  # [B, S, d] -> [S, B, H, dh]
+        return t.reshape(b, s, n_heads, dh).transpose(1, 0, 2, 3)
+
+    xi, xf, xz, xo = hview(xi), hview(xf), hview(xz), hview(xo)
+
+    if state is None:
+        zeros = jnp.zeros((b, n_heads, dh), F32)
+        rec0 = {"c": zeros, "n": zeros + 1e-6, "h": zeros, "m": jnp.zeros((b, n_heads), F32)}
+    else:
+        rec0 = state["rec"]
+
+    def step(rec, xs):
+        xi_t, xf_t, xz_t, xo_t = xs  # [B, H, dh]
+        hprev = rec["h"]
+        ri = jnp.einsum("bhk,hkj->bhj", hprev, p["r_i"].astype(F32))
+        rf = jnp.einsum("bhk,hkj->bhj", hprev, p["r_f"].astype(F32))
+        rz = jnp.einsum("bhk,hkj->bhj", hprev, p["r_z"].astype(F32))
+        ro = jnp.einsum("bhk,hkj->bhj", hprev, p["r_o"].astype(F32))
+        it = xi_t + ri
+        ft = xf_t + rf
+        z = jnp.tanh(xz_t + rz)
+        o = jax.nn.sigmoid(xo_t + ro)
+        # per-head scalar stabilizer (max over the head's channels)
+        m_new = jnp.maximum(
+            jnp.max(ft, axis=-1) + rec["m"], jnp.max(it, axis=-1)
+        )  # [B, H]
+        fp = jnp.exp(ft + (rec["m"] - m_new)[..., None])
+        ip = jnp.exp(it - m_new[..., None])
+        c = fp * rec["c"] + ip * z
+        n = fp * rec["n"] + ip
+        h = o * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    rec, hs = lax.scan(step, rec0, (xi, xf, xz, xo))  # hs [S, B, H, dh]
+    hm = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    hm = rms_norm(hm, p["norm"])
+    # post-up gated MLP (ratio 4/3)
+    u = dot(hm, p["w_up"])
+    g = jax.nn.gelu(dot(hm, p["w_gate"]).astype(F32)).astype(x.dtype)
+    y = dot(u * g, p["w_down"])
+    return y, {"rec": rec, "conv": conv_state}

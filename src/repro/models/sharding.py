@@ -1,0 +1,76 @@
+"""Sharding rules: logical activation/parameter axes -> mesh axes.
+
+The production mesh is ("data", "model") or ("pod", "data", "model")
+(launch/mesh.py).  Logical rules:
+
+  batch        -> ("pod","data")   (dp axes; "pod" only when multi-pod)
+  tp/feature   -> "model"          (attention heads / ffn hidden / vocab / experts)
+  fsdp         -> "data"           (second param axis: ZeRO-3 style)
+  seq (SP)     -> "model"          (norm/residual segments, long-context decode KV)
+
+Models call `shard(x, *logical_axes)`; outside a `use_rules` context this is a
+no-op, so model code stays mesh-agnostic (smoke tests run without any mesh).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    dp: tuple[str, ...] = ("data",)  # ("pod","data") when multi-pod
+    tp: str | None = "model"
+    fsdp: str | None = "data"
+    sp: str | None = "model"  # sequence parallelism axis (None disables SP)
+    shard_kv_seq: bool = True  # decode: shard KV cache seq dim over tp
+
+    def axis(self, name: str):
+        if name == "dp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if name == "tp":
+            return self.tp
+        if name == "fsdp":
+            return self.fsdp
+        if name == "sp":
+            return self.sp
+        if name is None or name == "none":
+            return None
+        raise ValueError(name)
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def use_rules(rules: ShardingRules | None):
+    old = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = old
+
+
+def spec(*logical) -> P:
+    """PartitionSpec from logical axis names under the current rules."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return P(*(rules.axis(a) if a else None for a in logical))
+
+
+def shard(x, *logical):
+    """with_sharding_constraint under the current rules (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical))

@@ -1,0 +1,610 @@
+"""Model assembly for all assigned architectures.
+
+One generic decoder/encoder built from the block pattern in ArchConfig:
+  attn / local_attn  -> layers.attention (+ MLP or MoE sublayer)
+  rglru              -> recurrent.rglru_block (+ MLP sublayer; Griffin layout)
+  mlstm / slstm      -> recurrent blocks (carry their own projections)
+
+Layer stacking uses lax.scan over the repeating pattern *unit* (compile-time
+O(1) in depth) with optional remat; config.block_tail layers are applied
+unscanned.  Decode carries a cache pytree: KV (ring buffer for local
+attention) or recurrent state per block.
+
+Public entry points:
+  init_params / abstract_params        parameter pytrees (real / ShapeDtypeStruct)
+  param_partition_specs                matching PartitionSpec tree
+  init_cache / abstract_cache          decode cache pytrees
+  forward_train -> per-token loss      (seq-chunked CE; never materializes
+                                        the full [B,S,V] logits)
+  forward_prefill -> last logits+cache
+  forward_decode  -> logits + cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import nn
+from .layers import (
+    apply_rope, attention, dot, mlp_apply, mlp_init, moe_apply, moe_init, rms_norm,
+)
+from .recurrent import (
+    mlstm_block, mlstm_init, rglru_block, rglru_init, slstm_block, slstm_init,
+)
+from .sharding import shard, spec
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------- builders
+def _attn_init(key, cfg: ArchConfig):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = nn.split_keys(key, ["q", "k", "v", "o", "qn", "kn"])
+    p = {
+        "wq": nn.dense_init(ks["q"], (d, hq * dh)),
+        "wk": nn.dense_init(ks["k"], (d, hkv * dh)),
+        "wv": nn.dense_init(ks["v"], (d, hkv * dh)),
+        "wo": nn.dense_init(ks["o"], (hq * dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,))
+        p["k_norm"] = jnp.ones((dh,))
+    return p
+
+
+def _block_init(key, cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    ks = nn.split_keys(key, ["mix", "mlp"])
+    p: dict[str, Any] = {"ln1": jnp.ones((d,))}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = _attn_init(ks["mix"], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks["mix"], d, cfg.rnn_width or d, cfg.conv_width)
+    elif kind == "mlstm":
+        p["mlstm"] = mlstm_init(ks["mix"], d, cfg.n_heads, cfg.conv_width)
+        return p  # own projections; no MLP sublayer
+    elif kind == "slstm":
+        p["slstm"] = slstm_init(ks["mix"], d, cfg.n_heads, cfg.conv_width)
+        return p
+    else:
+        raise ValueError(kind)
+    p["ln2"] = jnp.ones((d,))
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks["mlp"], d, cfg.d_ff, cfg.n_experts, cfg.mlp)
+    else:
+        p["mlp"] = mlp_init(ks["mlp"], d, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def _unit_init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {f"b{j}": _block_init(k, cfg, kind)
+            for j, (k, kind) in enumerate(zip(keys, cfg.pattern))}
+
+
+def init_params(cfg: ArchConfig, key):
+    ks = nn.split_keys(key, ["embed", "units", "tail", "head"])
+    d = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": nn.dense_init(ks["embed"], (cfg.vocab, d)),
+        "final_norm": jnp.ones((d,)),
+    }
+    unit_keys = jax.random.split(ks["units"], cfg.n_units)
+    p["units"] = jax.vmap(lambda k: _unit_init(k, cfg))(unit_keys)
+    if cfg.block_tail:
+        tkeys = jax.random.split(ks["tail"], len(cfg.block_tail))
+        p["tail"] = {
+            f"t{j}": _block_init(k, cfg, kind)
+            for j, (k, kind) in enumerate(zip(tkeys, cfg.block_tail))
+        }
+    if not cfg.tie_embeddings:
+        p["unembed"] = nn.dense_init(ks["head"], (d, cfg.vocab))
+    return p
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------ partition specs
+def param_partition_specs(cfg: ArchConfig):
+    """PartitionSpec tree mirroring init_params (TP over 'tp', FSDP over 'fsdp').
+
+    Convention: 2D weights shard (fsdp, tp) on (in, out) for up-projections and
+    (tp, fsdp) for down-projections; vectors replicate; experts shard on 'tp'.
+    A leading scan/stack axis (units) is never sharded.
+    """
+
+    def attn_spec(p):
+        out = {
+            "wq": spec("fsdp", "tp"), "wk": spec("fsdp", "tp"),
+            "wv": spec("fsdp", "tp"), "wo": spec("tp", "fsdp"),
+        }
+        if "q_norm" in p:
+            out["q_norm"] = spec(None)
+            out["k_norm"] = spec(None)
+        return out
+
+    def mlp_spec(p):
+        out = {"w_in": spec("fsdp", "tp"), "w_out": spec("tp", "fsdp")}
+        if "w_gate" in p:
+            out["w_gate"] = spec("fsdp", "tp")
+        return out
+
+    def moe_spec(p):
+        out = {
+            "router": spec("fsdp", None),
+            "w_in": spec("tp", "fsdp", None),
+            "w_out": spec("tp", None, "fsdp"),
+        }
+        if "w_gate" in p:
+            out["w_gate"] = spec("tp", "fsdp", None)
+        return out
+
+    def conv_spec(_p):
+        return {"w": spec(None, "tp"), "b": spec("tp")}
+
+    def rglru_spec(p):
+        return {
+            "w_x": spec("fsdp", "tp"), "w_gate": spec("fsdp", "tp"),
+            "w_out": spec("tp", "fsdp"), "conv": conv_spec(p["conv"]),
+            "w_a": spec(None, None, None), "w_i": spec(None, None, None),
+            "lam": spec("tp"),
+        }
+
+    def mlstm_spec(p):
+        return {
+            "w_up": spec("fsdp", "tp"), "w_ogate": spec("fsdp", "tp"),
+            "conv": conv_spec(p["conv"]),
+            "w_q": spec("fsdp", "tp"), "w_k": spec("fsdp", "tp"),
+            "w_v": spec("fsdp", "tp"), "w_if": spec("fsdp", None),
+            "b_if": spec(None), "norm": spec("tp"), "w_down": spec("tp", "fsdp"),
+        }
+
+    def slstm_spec(p):
+        out = {
+            "conv": conv_spec(p["conv"]), "norm": spec(None),
+            "w_up": spec("fsdp", "tp"), "w_gate": spec("fsdp", "tp"),
+            "w_down": spec("tp", "fsdp"), "b_f": spec(None),
+        }
+        for g in ("i", "f", "z", "o"):
+            out[f"w_{g}"] = spec("fsdp", None)
+            out[f"r_{g}"] = spec(None, None, None)
+        return out
+
+    def block_spec(p, kind):
+        out = {"ln1": spec(None)}
+        if kind in ("attn", "local_attn"):
+            out["attn"] = attn_spec(p["attn"])
+        elif kind == "rglru":
+            out["rglru"] = rglru_spec(p["rglru"])
+        elif kind == "mlstm":
+            out["mlstm"] = mlstm_spec(p["mlstm"])
+            return out
+        elif kind == "slstm":
+            out["slstm"] = slstm_spec(p["slstm"])
+            return out
+        if "ln2" in p:
+            out["ln2"] = spec(None)
+        if "moe" in p:
+            out["moe"] = moe_spec(p["moe"])
+        if "mlp" in p:
+            out["mlp"] = mlp_spec(p["mlp"])
+        return out
+
+    aparams = abstract_params(cfg)
+    specs: dict[str, Any] = {
+        "embed": spec("tp", "fsdp"),
+        "final_norm": spec(None),
+    }
+    unit0 = jax.tree.map(lambda x: x, aparams["units"])  # stacked leaves
+    specs["units"] = {
+        f"b{j}": _prepend_axis(block_spec(_index_tree(unit0[f"b{j}"]), kind))
+        for j, kind in enumerate(cfg.pattern)
+    }
+    if cfg.block_tail:
+        specs["tail"] = {
+            f"t{j}": block_spec(aparams["tail"][f"t{j}"], kind)
+            for j, kind in enumerate(cfg.block_tail)
+        }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = spec("fsdp", "tp")
+    return specs
+
+
+def _index_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+
+
+def _prepend_axis(spec_tree):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ------------------------------------------------------------------ the model
+def _heads(t, n, dh):
+    b, s, _ = t.shape
+    return t.reshape(b, s, n, dh).transpose(0, 2, 1, 3)
+
+
+def _attn_apply(p, cfg: ArchConfig, x, positions, cache, kind):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    window = cfg.local_window if kind == "local_attn" else 0
+    # pin sharding at the projection outputs — relying on backward
+    # propagation through reshape/transpose/rope leaves GSPMD free to
+    # replicate the weights (observed: full [d, d] weight all-gathers)
+    tp_mode = cfg.attn_sharding == "tp_heads"
+    qf = shard(dot(x, p["wq"]), "dp", None if tp_mode else "sp",
+               "tp" if tp_mode else None)
+    kf = shard(dot(x, p["wk"]), "dp", None if tp_mode else "sp", None)
+    vf = shard(dot(x, p["wv"]), "dp", None if tp_mode else "sp", None)
+    q = _heads(qf, hq, dh)
+    k = _heads(kf, hkv, dh)
+    v = _heads(vf, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    rope_pos = positions
+    q = apply_rope(q, rope_pos, cfg.rope_theta, cfg.m_rope_sections)
+    k = apply_rope(k, rope_pos, cfg.rope_theta, cfg.m_rope_sections)
+    # TP attention (§Perf it2): q-heads shard over 'model'; KV heads replicate
+    # (GQA kv counts rarely divide TP=16) and are expanded to per-q-head form
+    # so the head axis shards cleanly — wq/wo gradients stay TP-sharded, which
+    # removes the full-size weight-grad all-reduces the earlier
+    # context-parallel scheme paid (EXPERIMENTS.md §Perf, cmd-r+ cell).
+    # Archs with hq % 16 != 0 pad the head axis (surfaced in useful-ratio).
+    k_raw, v_raw = k, v  # cache stores unrepeated GQA heads
+    if s > 1:
+        if cfg.attn_sharding == "tp_heads":
+            if hq != hkv:
+                k = jnp.repeat(k, hq // hkv, axis=1)
+                v = jnp.repeat(v, hq // hkv, axis=1)
+            q = shard(q, "dp", "tp", None, None)
+            k = shard(k, "dp", "tp", None, None)
+            v = shard(v, "dp", "tp", None, None)
+        else:  # "context": batch+seq sharding, heads replicated (§Perf)
+            q = shard(q, "dp", None, "sp", None)
+            k = shard(k, "dp", None, None, None)
+            v = shard(v, "dp", None, None, None)
+
+    t_pos = positions[..., 0] if positions.ndim == 3 else positions  # [B, S]
+    if cache is None:
+        out = attention(q, k, v, causal=cfg.causal, window=window,
+                        q_offset=t_pos[:, 0], chunk=1024)
+        new_cache = None
+    elif s > 1 and not window:
+        # fresh full-attention prefill: attend over the fresh (repeated,
+        # TP-head-sharded) kv and write the cache on the side.  Chunked
+        # prefill continuation is only supported for windowed caches.
+        out = attention(q, k, v, causal=cfg.causal, q_offset=t_pos[:, 0],
+                        chunk=1024)
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        zero = jnp.int32(0)
+        start = t_pos[0, 0]
+        nk = lax.dynamic_update_slice(ck, k_raw.astype(ck.dtype),
+                                      (zero, zero, start, zero))
+        nv = lax.dynamic_update_slice(cv, v_raw.astype(cv.dtype),
+                                      (zero, zero, start, zero))
+        npos = lax.dynamic_update_slice(cpos, t_pos, (zero, start))
+        new_cache = {"k": shard(nk, "dp", None, "sp", None),
+                     "v": shard(nv, "dp", None, "sp", None), "pos": npos}
+    else:
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        size = ck.shape[2]
+        k_w, v_w, pos_w = k_raw, v_raw, t_pos
+        if s > size:  # ring buffer smaller than the write: keep only the tail
+            k_w, v_w = k_raw[:, :, -size:], v_raw[:, :, -size:]
+            pos_w = t_pos[:, -size:]
+        sw = k_w.shape[2]
+        if sw == 1 or not window:
+            # contiguous write -> dynamic-update-slice (in-place aliasable;
+            # scatter here made XLA double-buffer the whole cache)
+            start = jnp.mod(pos_w[0, 0], size) if window else pos_w[0, 0]
+            zero = jnp.int32(0)
+            nk = lax.dynamic_update_slice(ck, k_w.astype(ck.dtype),
+                                          (zero, zero, start, zero))
+            nv = lax.dynamic_update_slice(cv, v_w.astype(cv.dtype),
+                                          (zero, zero, start, zero))
+            npos = lax.dynamic_update_slice(cpos, pos_w, (zero, start))
+        else:  # windowed prefill may wrap the ring: scatter (cache is small)
+            slots = jnp.mod(pos_w[0], size)
+            nk = ck.at[:, :, slots].set(k_w.astype(ck.dtype))
+            nv = cv.at[:, :, slots].set(v_w.astype(cv.dtype))
+            npos = cpos.at[:, slots].set(pos_w)
+        nk = shard(nk, "dp", None, "sp", None)
+        nv = shard(nv, "dp", None, "sp", None)
+        if window and s > 1:
+            # windowed prefill: the ring may already have evicted keys that
+            # early queries need — attend over [old ring ∥ fresh kv] instead
+            ka = jnp.concatenate([ck.astype(k_raw.dtype), k_raw], axis=2)
+            va = jnp.concatenate([cv.astype(v_raw.dtype), v_raw], axis=2)
+            pa = jnp.concatenate([cpos, t_pos], axis=1)
+            out = attention(q, ka, va, causal=cfg.causal, window=window,
+                            q_offset=t_pos[:, 0], kv_pos=pa, chunk=1024)
+        else:
+            out = attention(q, nk, nv, causal=cfg.causal, window=window,
+                            q_offset=t_pos[:, 0], kv_pos=npos, chunk=1024)
+        new_cache = {"k": nk, "v": nv, "pos": npos}
+    if s > 1:
+        if cfg.attn_sharding == "tp_heads":
+            out = shard(out, "dp", "tp", None, None)
+        else:
+            out = shard(out, "dp", None, "sp", None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return dot(out, p["wo"]), new_cache
+
+
+def _block_apply(p, cfg: ArchConfig, kind, x, positions, cache):
+    h = rms_norm(x, p["ln1"])
+    if kind in ("attn", "local_attn") and cfg.parallel_block:
+        # Cohere/GPT-J parallel residual: both branches read one normed input
+        # (one TP all-gather) and their sum is reduced once.
+        mix, new_cache = _attn_apply(p["attn"], cfg, h, positions, cache, kind)
+        if cfg.n_experts:
+            y = moe_apply(p["moe"], h, top_k=cfg.top_k, kind=cfg.mlp,
+                          capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y = mlp_apply(p["mlp"], h, cfg.mlp)
+        return x + mix + y, new_cache
+    if kind in ("attn", "local_attn"):
+        mix, new_cache = _attn_apply(p["attn"], cfg, h, positions, cache, kind)
+    elif kind == "rglru":
+        mix, new_cache = rglru_block(p["rglru"], h, cache)
+    elif kind == "mlstm":
+        mix, new_cache = mlstm_block(p["mlstm"], h, cfg.n_heads, cache)
+        return x + mix, new_cache
+    elif kind == "slstm":
+        mix, new_cache = slstm_block(p["slstm"], h, cfg.n_heads, cache)
+        return x + mix, new_cache
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.n_experts:
+        y = moe_apply(p["moe"], h2, top_k=cfg.top_k, kind=cfg.mlp,
+                      capacity_factor=cfg.moe_capacity_factor)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg.mlp)
+    return x + y, new_cache
+
+
+def _apply_stack(params, cfg: ArchConfig, x, positions, cache, *, train: bool):
+    """Scan over units + tail. cache=None in train mode."""
+
+    def unit_fn(x, unit_params, unit_cache):
+        new_caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            c = None if unit_cache is None else unit_cache[f"b{j}"]
+            x, nc = _block_apply(unit_params[f"b{j}"], cfg, kind, x, positions, c)
+            new_caches[f"b{j}"] = nc
+        x = shard(x, "dp", "sp" if train else None, None)
+        return x, (None if unit_cache is None else new_caches)
+
+    if train and cfg.remat:
+        unit_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(),
+        )
+
+    if cache is None:
+        def scan_body(x, up):
+            x, _ = unit_fn(x, up, None)
+            return x, None
+
+        x, _ = lax.scan(scan_body, x, params["units"])
+        new_cache = None
+    else:
+        # cache lives in the scan CARRY, updated in place per unit.  As scan
+        # xs/ys it is loop-invariant input + freshly assembled output, which
+        # lets XLA hoist dtype conversions of the entire stacked cache out of
+        # the loop (observed: a full f32 copy of a 64-layer KV cache).
+        def scan_body(carry, up):
+            x, caches, i = carry
+            uc = jax.tree.map(
+                lambda t: lax.dynamic_index_in_dim(t, i, 0, keepdims=False), caches
+            )
+            x, nc = unit_fn(x, up, uc)
+            caches = jax.tree.map(
+                lambda t, v: lax.dynamic_update_index_in_dim(
+                    t, v.astype(t.dtype), i, 0
+                ),
+                caches, nc,
+            )
+            return (x, caches, i + 1), None
+
+        (x, new_unit_caches, _), _ = lax.scan(
+            scan_body, (x, cache["units"], jnp.int32(0)), params["units"]
+        )
+        new_cache = {"units": new_unit_caches}
+    if cfg.block_tail:
+        tail_caches = {}
+        for j, kind in enumerate(cfg.block_tail):
+            c = None if cache is None else cache["tail"][f"t{j}"]
+            x, nc = _block_apply(params["tail"][f"t{j}"], cfg, kind, x, positions, c)
+            tail_caches[f"t{j}"] = nc
+        if cache is not None:
+            new_cache["tail"] = tail_caches
+    if cache is not None:
+        new_cache["len"] = cache["len"] + x.shape[1]
+    return x, new_cache
+
+
+def _embed(params, cfg: ArchConfig, tokens_or_embeds):
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0).astype(dt)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    else:
+        x = tokens_or_embeds.astype(dt)
+    return shard(x, "dp", None, None)
+
+
+def _unembed_matrix(params):
+    return params["unembed"] if "unembed" in params else params["embed"].T
+
+
+def chunked_ce_loss(h, labels, unembed, norm_w, chunk=512):
+    """Mean CE over positions without materializing [B, S, V] logits."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = h.shape[1] // chunk
+    hs = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(acc, xs):
+        hc, lc = xs
+        hc = rms_norm(hc, norm_w)
+        logits = jnp.einsum("bsd,dv->bsv", hc, unembed.astype(hc.dtype),
+                            preferred_element_type=F32)
+        logits = shard(logits, "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lc >= 0
+        loss = jnp.sum(jnp.where(valid, logz - gold, 0.0))
+        return (acc[0] + loss, acc[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.int32(0)), (hs, ls))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def forward_train(params, cfg: ArchConfig, batch):
+    """batch: {"inputs": tokens [B,S] or embeds [B,S,d], "labels": [B,S],
+    "positions": [B,S] or [B,S,3]}.  Returns mean CE loss."""
+    x = _embed(params, cfg, batch["inputs"])
+    positions = batch["positions"]
+    x, _ = _apply_stack(params, cfg, x, positions, None, train=True)
+    return chunked_ce_loss(x, batch["labels"], _unembed_matrix(params),
+                           params["final_norm"])
+
+
+def forward_prefill(params, cfg: ArchConfig, batch, cache):
+    """Prefill: run the full prompt, fill the cache, return last-token logits."""
+    x = _embed(params, cfg, batch["inputs"])
+    positions = batch["positions"]
+    x, cache = _apply_stack(params, cfg, x, positions, cache, train=False)
+    h_last = rms_norm(x[:, -1], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", h_last, _unembed_matrix(params).astype(h_last.dtype),
+                        preferred_element_type=F32)
+    return shard(logits, "dp", "tp"), cache
+
+
+def forward_decode(params, cfg: ArchConfig, tokens, cache):
+    """One decode step. tokens [B, 1] int32."""
+    x = _embed(params, cfg, tokens)
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos[None, None], (x.shape[0], 1)).astype(jnp.int32)
+    if cfg.m_rope_sections:
+        positions = positions[..., None].repeat(3, axis=-1)
+    x, cache = _apply_stack(params, cfg, x, positions, cache, train=False)
+    h = rms_norm(x[:, 0], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", h, _unembed_matrix(params).astype(h.dtype),
+                        preferred_element_type=F32)
+    return shard(logits, "dp", "tp"), cache
+
+
+# ---------------------------------------------------------------------- cache
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    d = cfg.d_model
+    if kind in ("attn", "local_attn"):
+        size = min(cfg.local_window, max_len) if kind == "local_attn" else max_len
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+        return {
+            "k": jnp.zeros((batch, hkv, size, dh), dtype),
+            "v": jnp.zeros((batch, hkv, size, dh), dtype),
+            "pos": jnp.full((batch, size), -1, jnp.int32),
+        }
+    w = cfg.rnn_width or d
+    cw = cfg.conv_width - 1
+    if kind == "rglru":
+        return {"h": jnp.zeros((batch, w), F32),
+                "conv": jnp.zeros((batch, cw, w), dtype)}
+    if kind == "mlstm":
+        up = 2 * d
+        dh = up // cfg.n_heads
+        return {
+            "rec": (
+                jnp.zeros((batch, cfg.n_heads, dh, dh), F32),
+                jnp.zeros((batch, cfg.n_heads, dh), F32),
+                jnp.full((batch, cfg.n_heads), -1e30, F32),
+            ),
+            "conv": jnp.zeros((batch, cw, up), dtype),
+        }
+    if kind == "slstm":
+        dh = d // cfg.n_heads
+        z = jnp.zeros((batch, cfg.n_heads, dh), F32)
+        return {
+            "rec": {"c": z, "n": z + 1e-6, "h": z, "m": jnp.zeros((batch, cfg.n_heads), F32)},
+            "conv": jnp.zeros((batch, cw, d), dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    if dtype is None:
+        dtype = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    unit_cache = {
+        f"b{j}": _block_cache(cfg, kind, batch, max_len, dtype)
+        for j, kind in enumerate(cfg.pattern)
+    }
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_units,) + x.shape), unit_cache
+    )
+    cache = {"units": stacked, "len": jnp.int32(0)}
+    if cfg.block_tail:
+        cache["tail"] = {
+            f"t{j}": _block_cache(cfg, kind, batch, max_len, dtype)
+            for j, kind in enumerate(cfg.block_tail)
+        }
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def cache_partition_specs(cfg: ArchConfig, cache_abs, dp_divides: bool = True):
+    """KV tensors: batch->dp, seq->sp (flash-decode style); states: batch->dp.
+
+    dp_divides=False (e.g. long_500k's global_batch=1): replicate the batch
+    dim — pjit input shardings require exact divisibility.
+    """
+    from .sharding import current_rules
+
+    rules = current_rules()
+
+    def ax(name):
+        if name == "dp" and not dp_divides:
+            return None
+        return None if rules is None else rules.axis(name)
+
+    def leaf_spec(path, x):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        rank = len(x.shape)
+        stacked = "units" in names
+        lead = (None,) if stacked else ()
+        if "k" in names or "v" in names:
+            return P(*(lead + (ax("dp"), None, ax("sp"), None)))
+        if "pos" in names:
+            return P(*(lead + (ax("dp"), ax("sp"))))
+        if rank - len(lead) >= 1 and names[-1] != "len":
+            rest = (None,) * (rank - len(lead) - 1)
+            return P(*(lead + (ax("dp"),) + rest))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abs)

@@ -1,0 +1,122 @@
+"""AdamW with global-norm clipping, cosine schedule, and optional int8
+error-feedback gradient compression — built from scratch (no optax).
+
+Optimizer state mirrors the parameter pytree, so NamedSharding specs for
+params apply verbatim to m/v (ZeRO-style: params are already FSDP-sharded
+over the 'data' axis, so the moments are too).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    compress: bool = False  # int8 error-feedback gradient compression
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_state(cfg: AdamWConfig, params):
+    state = {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return state
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), gn
+
+
+def _quantize_int8(x):
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef):
+    """int8 error-feedback compression (1-bit-Adam style memory).
+
+    On a real multi-pod deployment this wraps the cross-pod reduce-scatter
+    (compressed payload over the slow inter-pod links); here it is applied to
+    the already-reduced gradient with identical convergence semantics.
+    """
+
+    def one(g, e):
+        x = g.astype(F32) + e
+        q, scale = _quantize_int8(x)
+        deq = q.astype(F32) * scale
+        return deq, x - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.compress:
+        grads, new_ef = compress_grads(grads, state["ef"])
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p.astype(F32) - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                      + cfg.weight_decay * p.astype(F32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    if cfg.compress:
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

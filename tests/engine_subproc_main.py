@@ -1,0 +1,74 @@
+"""Subprocess entry for multi-device engine tests.
+
+Must set XLA_FLAGS before importing jax — pytest's process already initialized
+jax with 1 device, so multi-device engine tests run this script instead.
+
+Usage: python engine_subproc_main.py '<json spec>'   -> prints a json result.
+"""
+
+import json
+import os
+import sys
+
+
+def main():
+    spec = json.loads(sys.argv[1])
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={spec['n_devices']} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import numpy as np
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    from repro.core.engine import EngineConfig, lamp_distributed, mine
+    from repro.data.synthetic import SyntheticSpec, generate
+
+    gspec = SyntheticSpec(
+        name="sub",
+        n_items=spec["n_items"],
+        n_transactions=spec["n_transactions"],
+        density=spec["density"],
+        n_pos=spec["n_pos"],
+        n_planted=spec.get("n_planted", 2),
+        seed=spec.get("seed", 0),
+    )
+    db, labels, _ = generate(gspec)
+    cfg = EngineConfig(
+        expand_batch=spec.get("expand_batch", 8),
+        stack_cap=spec.get("stack_cap", 4096),
+        steal_max=spec.get("steal_max", 64),
+        push_cap=spec.get("push_cap", 256),
+        steal_enabled=spec.get("steal_enabled", True),
+        seed=spec.get("engine_seed", 0),
+        kernel_impl=spec.get("kernel_impl", "ref"),
+    )
+    out = {}
+    if spec["mode"] == "lamp_full":
+        res = lamp_distributed(db, labels, alpha=spec.get("alpha", 0.05), cfg=cfg)
+        p1, p2, p3 = res["phase_outputs"]
+        out = {
+            "lambda_final": res["lambda_final"],
+            "min_sup": res["min_sup"],
+            "correction_factor": res["correction_factor"],
+            "delta": res["delta"],
+            "n_significant": res["n_significant"],
+            "p1_supersteps": p1.supersteps,
+            "steals_got": p1.stats["steals_got"].tolist(),
+            "closed_per_dev": p2.stats["closed"].tolist(),
+            "popped_per_dev": p2.stats["popped"].tolist(),
+        }
+    elif spec["mode"] == "count":
+        res = mine(db, labels, mode="count", min_sup=spec["min_sup"], cfg=cfg)
+        out = {
+            "hist": res.hist.tolist(),
+            "supersteps": res.supersteps,
+            "closed_per_dev": res.stats["closed"].tolist(),
+            "steals_got": res.stats["steals_got"].tolist(),
+            "gives": res.stats["gives"].tolist(),
+        }
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Distributed engine vs sequential oracle.
+
+In-process tests run with the default single device (P=1 exercises the full
+BSP machinery minus real steals).  Multi-device tests spawn a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=P — pytest's jax is already
+initialized with one device, and the flag must precede first jax init.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, lamp_distributed, mine
+from repro.core.lamp import lamp
+from repro.core.lcm import lcm_closed
+from repro.data.synthetic import SyntheticSpec, generate
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def small_problem(seed=0, n=60, m=24, density=0.15, n_pos=20, planted=2):
+    spec = SyntheticSpec(
+        name="t", n_items=m, n_transactions=n, density=density, n_pos=n_pos,
+        n_planted=planted, seed=seed,
+    )
+    return generate(spec)
+
+
+CFG = EngineConfig(expand_batch=8, stack_cap=2048, steal_max=32, push_cap=128)
+
+
+# ------------------------------------------------------------- in-process P=1
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_count_mode_matches_sequential(seed):
+    db, labels, _ = small_problem(seed=seed)
+    min_sup = 3
+    res = mine(db, labels, mode="count", min_sup=min_sup, cfg=CFG)
+    seq, _ = lcm_closed(db, min_sup=min_sup)
+    want = np.zeros_like(res.hist)
+    for _, s in seq:
+        want[s] += 1
+    np.testing.assert_array_equal(res.hist, want)
+
+
+def test_lamp1_matches_sequential():
+    db, labels, _ = small_problem(seed=3)
+    res = mine(db, labels, mode="lamp1", alpha=0.05, cfg=CFG)
+    ref = lamp(db, labels, alpha=0.05)
+    assert res.lam_final == ref.lambda_final
+
+
+def test_full_pipeline_matches_sequential():
+    db, labels, _ = small_problem(seed=4)
+    got = lamp_distributed(db, labels, alpha=0.05, cfg=CFG)
+    ref = lamp(db, labels, alpha=0.05)
+    assert got["min_sup"] == ref.min_sup
+    assert got["correction_factor"] == ref.correction_factor
+    assert got["n_significant"] == len(ref.significant)
+    # sample buffer contents agree with reference (sup, pos_sup) multiset
+    p3 = got["phase_outputs"][2]
+    got_pairs = sorted(zip(p3.sig_sup.tolist(), p3.sig_pos_sup.tolist()))
+    ref_pairs = sorted(
+        (s.support, s.pos_support) for s in ref.significant if len(s.items) > 0
+    )
+    assert got_pairs == ref_pairs
+
+
+def test_push_cap_resume_path():
+    """Tiny push cap forces resume nodes; result must not change."""
+    db, labels, _ = small_problem(seed=5, m=16)
+    tight = EngineConfig(expand_batch=4, stack_cap=2048, steal_max=16, push_cap=8)
+    res_tight = mine(db, labels, mode="count", min_sup=2, cfg=tight)
+    res_wide = mine(db, labels, mode="count", min_sup=2, cfg=CFG)
+    np.testing.assert_array_equal(res_tight.hist, res_wide.hist)
+
+
+def test_expand_batch_sweep():
+    db, labels, _ = small_problem(seed=6)
+    ref_hist = None
+    for b in [1, 4, 16]:
+        cfg = EngineConfig(expand_batch=b, stack_cap=2048, steal_max=32, push_cap=128)
+        res = mine(db, labels, mode="count", min_sup=2, cfg=cfg)
+        if ref_hist is None:
+            ref_hist = res.hist
+        else:
+            np.testing.assert_array_equal(res.hist, ref_hist)
+
+
+# ------------------------------------------------------------ subprocess P>=2
+def run_subproc(spec: dict) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "engine_subproc_main.py"), json.dumps(spec)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_devices", [4, 6, 8])
+def test_multidevice_count_matches_oracle(n_devices):
+    prob = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20, seed=0)
+    spec = dict(prob, mode="count", min_sup=3, n_devices=n_devices)
+    got = run_subproc(spec)
+    db, labels, _ = small_problem(seed=0)
+    seq, _ = lcm_closed(db, min_sup=3)
+    want = np.zeros(62, dtype=np.int64)
+    for _, s in seq:
+        want[s] += 1
+    np.testing.assert_array_equal(np.array(got["hist"]), want)
+    assert sum(got["steals_got"]) > 0, "multi-device run should exercise steals"
+
+
+@pytest.mark.slow
+def test_multidevice_lamp_full_matches_oracle():
+    prob = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20, seed=1)
+    spec = dict(prob, mode="lamp_full", n_devices=8)
+    got = run_subproc(spec)
+    db, labels, _ = small_problem(seed=1)
+    ref = lamp(db, labels, alpha=0.05)
+    assert got["min_sup"] == ref.min_sup
+    assert got["correction_factor"] == ref.correction_factor
+    assert got["n_significant"] == len(ref.significant)
+
+
+@pytest.mark.slow
+def test_steal_disabled_naive_mode_still_correct():
+    """Paper §5.4's naive split: correct results, worse balance."""
+    prob = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20, seed=0)
+    spec = dict(prob, mode="count", min_sup=3, n_devices=8, steal_enabled=False)
+    got = run_subproc(spec)
+    db, labels, _ = small_problem(seed=0)
+    seq, _ = lcm_closed(db, min_sup=3)
+    assert int(np.sum(got["hist"])) == len(seq)
+    assert sum(got["steals_got"]) == 0
+
+
+@pytest.mark.slow
+def test_pallas_kernel_in_engine():
+    """Engine with the Pallas support-count kernel (interpret mode)."""
+    prob = dict(n_items=16, n_transactions=40, density=0.2, n_pos=12, seed=2)
+    spec = dict(
+        prob, mode="count", min_sup=2, n_devices=2, kernel_impl="pallas_interpret"
+    )
+    got = run_subproc(spec)
+    db, labels, _ = small_problem(seed=2, m=16, n=40, density=0.2, n_pos=12)
+    seq, _ = lcm_closed(db, min_sup=2)
+    assert int(np.sum(got["hist"])) == len(seq)
+
+
+def test_fused_phase23_matches_three_phase():
+    """Beyond-paper: 2-pass (hist2d) LAMP == the paper's 3-phase pipeline."""
+    for seed in [0, 4, 7]:
+        db, labels, _ = small_problem(seed=seed)
+        a = lamp_distributed(db, labels, alpha=0.05, cfg=CFG)
+        b = lamp_distributed(db, labels, alpha=0.05, cfg=CFG, fuse_phase23=True)
+        assert b["min_sup"] == a["min_sup"]
+        assert b["correction_factor"] == a["correction_factor"]
+        assert b["delta"] == a["delta"]
+        assert b["n_significant"] == a["n_significant"]
+        assert len(b["phase_outputs"]) == 2  # one traversal saved

@@ -1,0 +1,74 @@
+"""Fisher exact test + Tarone bound vs scipy oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats as sps
+
+from repro.core.fisher import (
+    fisher_pvalue,
+    fisher_pvalue_jnp,
+    lamp_count_thresholds,
+    min_attainable_pvalue,
+    min_attainable_pvalue_jnp,
+)
+
+
+@given(
+    N=st.integers(4, 120),
+    data=st.data(),
+)
+@settings(max_examples=80, deadline=None)
+def test_fisher_matches_scipy(N, data):
+    N_pos = data.draw(st.integers(1, N - 1))
+    x = data.draw(st.integers(1, N))
+    n = data.draw(st.integers(max(0, x - (N - N_pos)), min(x, N_pos)))
+    p = fisher_pvalue(x, n, N, N_pos)[0]
+    table = [[n, x - n], [N_pos - n, (N - N_pos) - (x - n)]]
+    p_ref = sps.fisher_exact(table, alternative="greater")[1]
+    assert p == pytest.approx(p_ref, rel=1e-9, abs=1e-12)
+
+
+@given(N=st.integers(4, 200), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_min_attainable_is_lower_bound_and_attained(N, data):
+    N_pos = data.draw(st.integers(1, N - 1))
+    x = data.draw(st.integers(1, N))
+    f = min_attainable_pvalue(x, N, N_pos)
+    n_star = min(x, N_pos)
+    # attained at n = n_star
+    p_at = fisher_pvalue(x, n_star, N, N_pos)[0]
+    assert f == pytest.approx(p_at, rel=1e-9, abs=1e-12)
+    # lower-bounds every achievable n
+    lo = max(0, x - (N - N_pos))
+    for n in range(lo, n_star + 1):
+        assert fisher_pvalue(x, n, N, N_pos)[0] >= f - 1e-12
+
+
+def test_min_attainable_monotone_up_to_npos():
+    N, N_pos = 120, 30
+    f = min_attainable_pvalue(np.arange(0, N_pos + 1), N, N_pos)
+    assert np.all(np.diff(f) <= 1e-15)
+
+
+def test_threshold_table_monotone_and_capped():
+    N, N_pos, alpha = 100, 25, 0.05
+    thr = lamp_count_thresholds(N, N_pos, alpha)
+    # monotone non-decreasing over the valid range
+    assert np.all(np.diff(thr[1 : N_pos + 2]) >= -1e-9)
+    assert thr[1] == pytest.approx(alpha)  # f(0) = 1
+    assert np.all(np.isinf(thr[N_pos + 2 :]))
+
+
+def test_jnp_matches_numpy():
+    N, N_pos = 97, 23
+    rng = np.random.default_rng(0)
+    x = rng.integers(1, N, size=64)
+    n = np.minimum(x, rng.integers(0, N_pos + 1, size=64))
+    n = np.maximum(n, np.maximum(0, x - (N - N_pos)))
+    p_np = fisher_pvalue(x, n, N, N_pos)
+    p_j = np.asarray(fisher_pvalue_jnp(x, n, N, N_pos))
+    np.testing.assert_allclose(p_j, p_np, rtol=2e-4, atol=1e-7)
+    f_np = min_attainable_pvalue(x, N, N_pos)
+    f_j = np.asarray(min_attainable_pvalue_jnp(x, N, N_pos))
+    np.testing.assert_allclose(f_j, f_np, rtol=2e-4, atol=1e-7)

@@ -1,0 +1,110 @@
+"""HLO cost parser vs XLA cost_analysis (and scan trip-count handling)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.hlo_cost import parse_hlo_costs
+
+
+def test_matches_cost_analysis_unrolled():
+    @jax.jit
+    def f(x, w1, w2):
+        h = jnp.einsum("bd,df->bf", x, w1)
+        return jnp.einsum("bf,fd->bd", jnp.tanh(h), w2)
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+    comp = f.lower(x, w1, w2).compile()
+    got = parse_hlo_costs(comp.as_text())
+    want = comp.cost_analysis()["flops"]
+    theory = 2 * 64 * 128 * 256 * 2
+    assert got["flops"] == pytest.approx(theory, rel=0.01)
+    assert got["flops"] == pytest.approx(want, rel=0.05)
+
+
+def test_scan_trip_count_multiplied():
+    N = 8
+
+    @jax.jit
+    def f(x, ws):
+        y, _ = lax.scan(lambda c, w: (jnp.einsum("bd,df->bf", c, w), None), x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((N, 64, 64), jnp.float32)
+    comp = f.lower(x, ws).compile()
+    got = parse_hlo_costs(comp.as_text())
+    theory = 2 * 32 * 64 * 64 * N
+    assert got["flops"] == pytest.approx(theory, rel=0.02), got["flops"]
+    # XLA's own analysis counts the body once -> we must exceed it ~N-fold
+    assert got["flops"] > 4 * comp.cost_analysis()["flops"]
+
+
+def test_nested_scan():
+    @jax.jit
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.einsum("bd,df->bf", ci, w), None
+            y, _ = lax.scan(inner, c, None, length=3)
+            return y, None
+        y, _ = lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+    comp = f.lower(x, ws).compile()
+    got = parse_hlo_costs(comp.as_text())
+    theory = 2 * 16 * 32 * 32 * 3 * 4
+    assert got["flops"] == pytest.approx(theory, rel=0.05), got["flops"]
+
+
+def test_collective_bytes_parsed():
+    import os
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >1 device (run in dryrun subprocess instead)")
+
+
+def test_collective_bytes_in_subprocess():
+    """ppermute/psum byte accounting with forced multi-device CPU."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json, sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.hlo_cost import parse_hlo_costs
+
+        mesh = jax.make_mesh((4,), ("d",))
+
+        @jax.jit
+        def f(x):
+            y = jax.lax.with_sharding_constraint(
+                jnp.broadcast_to(x.sum(), (128, 128)), NamedSharding(mesh, P()))
+            return y
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32,
+                                 sharding=NamedSharding(mesh, P("d", None)))
+        comp = jax.jit(lambda x: x.sum()).lower(x).compile()
+        got = parse_hlo_costs(comp.as_text())
+        print(json.dumps(got["coll_payload"]))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert "all-reduce" in payload and payload["all-reduce"] >= 4.0

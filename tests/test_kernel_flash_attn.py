@@ -1,0 +1,81 @@
+"""Flash-attention Pallas kernel vs naive softmax oracle (interpret mode)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def make_qkv(rng, b, hq, hkv, sq, skv, d, dtype):
+    q = rng.normal(size=(b, hq, sq, d)).astype(dtype)
+    k = rng.normal(size=(b, hkv, skv, d)).astype(dtype)
+    v = rng.normal(size=(b, hkv, skv, d)).astype(dtype)
+    return q, k, v
+
+
+def ref_gqa(q, k, v, causal):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    out = attention_ref(
+        q.reshape(b * hq, sq, d), k.reshape(b * hq, skv, d), v.reshape(b * hq, skv, d),
+        causal=causal, q_offset=skv - sq if causal else 0,
+    )
+    return np.asarray(out).reshape(b, hq, sq, d)
+
+
+@pytest.mark.parametrize("sq,skv", [(128, 128), (256, 256), (128, 384), (100, 100), (257, 300)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_shapes_and_causal(sq, skv, causal):
+    rng = np.random.default_rng(sq + skv)
+    q, k, v = make_qkv(rng, 1, 2, 2, sq, skv, 64, np.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=causal, interpret=True))
+    want = ref_gqa(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_gqa_head_groups(hq, hkv):
+    rng = np.random.default_rng(hq * 10 + hkv)
+    q, k, v = make_qkv(rng, 2, hq, hkv, 128, 128, 32, np.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=True, interpret=True))
+    want = ref_gqa(q, k, v, True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, tol):
+    rng = np.random.default_rng(9)
+    q, k, v = make_qkv(rng, 1, 2, 2, 128, 128, 64, np.float32)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    got = np.asarray(flash_attention(q, k, v, causal=True, interpret=True), dtype=np.float32)
+    want = ref_gqa(
+        jnp.asarray(q, jnp.float32), jnp.asarray(k, jnp.float32), jnp.asarray(v, jnp.float32), True
+    )
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(128, 128), (128, 256), (256, 128)])
+def test_block_sweep(block_q, block_k):
+    rng = np.random.default_rng(11)
+    q, k, v = make_qkv(rng, 1, 2, 2, 300, 300, 64, np.float32)
+    got = np.asarray(
+        flash_attention(q, k, v, causal=True, block_q=block_q, block_k=block_k, interpret=True)
+    )
+    want = ref_gqa(q, k, v, True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_scale_override():
+    rng = np.random.default_rng(13)
+    q, k, v = make_qkv(rng, 1, 1, 1, 128, 128, 64, np.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=False, scale=0.5, interpret=True))
+    want = np.asarray(
+        attention_ref(q.reshape(1, 128, 64), k.reshape(1, 128, 64), v.reshape(1, 128, 64),
+                      causal=False, scale=0.5)
+    ).reshape(1, 1, 128, 64)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

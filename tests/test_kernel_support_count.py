@@ -1,0 +1,65 @@
+"""Support-count Pallas kernel vs jnp oracle (interpret mode), shape sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmap import pack_db, supports_np
+from repro.kernels.support_count.ops import support_counts
+from repro.kernels.support_count.ref import support_count_ref
+
+
+def rand_words(rng, shape):
+    return rng.integers(0, 2**32, size=shape, dtype=np.uint32)
+
+
+@pytest.mark.parametrize("b", [1, 3, 8, 17])
+@pytest.mark.parametrize("m", [1, 5, 512, 700])
+@pytest.mark.parametrize("w", [1, 7, 32, 40])
+def test_shape_sweep(b, m, w):
+    rng = np.random.default_rng(b * 1000 + m * 10 + w)
+    occ = rand_words(rng, (b, w))
+    db_t = rand_words(rng, (w, m))
+    got = np.asarray(support_counts(occ, db_t, interpret=True))
+    want = np.asarray(support_count_ref(occ, db_t))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_b,block_m,block_w", [(8, 128, 8), (8, 512, 32), (16, 256, 16)])
+def test_block_shape_sweep(block_b, block_m, block_w):
+    rng = np.random.default_rng(0)
+    occ = rand_words(rng, (24, 50))
+    db_t = rand_words(rng, (50, 300))
+    got = np.asarray(
+        support_counts(occ, db_t, block_b=block_b, block_m=block_m, block_w=block_w,
+                       interpret=True)
+    )
+    want = np.asarray(support_count_ref(occ, db_t))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    n=st.integers(1, 130),
+    m=st.integers(1, 40),
+    b=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_vs_packed_real_db(n, m, b, seed):
+    """End-to-end: packed boolean DB + real occurrence bitmaps."""
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, m)) < 0.4
+    bits = pack_db(db)  # [M, W]
+    occ_rows = bits[rng.integers(0, m, size=b)]  # item columns as occurrences
+    got = np.asarray(support_counts(occ_rows, np.ascontiguousarray(bits.T), interpret=True))
+    want = supports_np(occ_rows, bits)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ref_impl_path():
+    rng = np.random.default_rng(5)
+    occ = rand_words(rng, (4, 10))
+    db_t = rand_words(rng, (10, 33))
+    got = np.asarray(support_counts(occ, db_t, impl="ref"))
+    want = np.asarray(support_count_ref(occ, db_t))
+    np.testing.assert_array_equal(got, want)

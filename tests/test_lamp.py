@@ -1,0 +1,106 @@
+"""LAMP support-increase procedure vs exhaustive lambda search + FWER sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fisher import fisher_pvalue, lamp_count_thresholds, min_attainable_pvalue
+from repro.core.lamp import Phase1State, lamp, lamp_phase1
+from repro.core.lcm import brute_force_closed
+from repro.data.synthetic import SyntheticSpec, generate
+
+
+@st.composite
+def labelled_dbs(draw):
+    n = draw(st.integers(10, 48))
+    m = draw(st.integers(3, 9))
+    density = draw(st.floats(0.1, 0.7))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, m)) < density
+    n_pos = draw(st.integers(2, n - 2))
+    labels = np.zeros(n, dtype=bool)
+    labels[rng.choice(n, size=n_pos, replace=False)] = True
+    return db, labels
+
+
+def exhaustive_min_sup(db, n_pos, alpha):
+    """Reference: largest lambda with CS(lambda) * f(lambda-1) > alpha  (Eq 3.1)."""
+    n = db.shape[0]
+    closed = brute_force_closed(db, min_sup=1)
+    sups = np.array(sorted(s for s in closed.values()))
+    thr = lamp_count_thresholds(n, n_pos, alpha)
+    best = 1
+    for lam in range(1, min(n_pos + 1, n) + 1):
+        cs = int((sups >= lam).sum())
+        if cs > thr[lam]:
+            best = lam
+    return best, int((sups >= best).sum())
+
+
+@given(data=labelled_dbs(), alpha=st.sampled_from([0.01, 0.05, 0.2]))
+@settings(max_examples=40, deadline=None)
+def test_support_increase_matches_exhaustive(data, alpha):
+    db, labels = data
+    n_pos = int(labels.sum())
+    lam_final, min_sup, _ = lamp_phase1(db, n_pos, alpha)
+    ref_min_sup, _ = exhaustive_min_sup(db, n_pos, alpha)
+    assert min_sup == ref_min_sup
+    assert lam_final == ref_min_sup + 1 or (lam_final == 1 and ref_min_sup == 1)
+
+
+@given(data=labelled_dbs())
+@settings(max_examples=20, deadline=None)
+def test_lamp_correction_counts_match_oracle(data):
+    db, labels = data
+    res = lamp(db, labels, alpha=0.05)
+    oracle = brute_force_closed(db, min_sup=res.min_sup)
+    assert res.correction_factor == len(oracle)
+    # every reported significant pattern is a closed set with p <= delta
+    n, n_pos = res.n_transactions, res.n_pos
+    for sig in res.significant:
+        assert sig.items in oracle
+        p = fisher_pvalue(sig.support, sig.pos_support, n, n_pos)[0]
+        assert p == pytest.approx(sig.pvalue, rel=1e-9)
+        assert p <= res.delta
+    # and no closed set with p <= delta was missed
+    from repro.core.bitmap import pack_db, full_occ, support_np, unpack_occ
+
+    bits = pack_db(db)
+    found = {s.items for s in res.significant}
+    for items, sup in oracle.items():
+        occ = full_occ(n)
+        for j in items:
+            occ = occ & bits[j]
+        psup = int(np.count_nonzero(unpack_occ(occ, n) & labels))
+        p = fisher_pvalue(sup, psup, n, n_pos)[0]
+        if p <= res.delta:
+            assert items in found
+
+
+def test_planted_patterns_are_found():
+    spec = SyntheticSpec(
+        name="t", n_items=40, n_transactions=120, density=0.08, n_pos=40,
+        n_planted=2, planted_pos_rate=0.8, planted_neg_rate=0.02, seed=7,
+    )
+    db, labels, planted = generate(spec)
+    res = lamp(db, labels, alpha=0.05)
+    assert res.significant, "planted signal must be detected"
+    sig_sets = [set(s.items) for s in res.significant]
+    hits = sum(any(set(p) <= s for s in sig_sets) for p in planted)
+    assert hits >= 1
+
+
+def test_fwer_control_on_null_data():
+    """On label-permuted (null) data, findings should be rare (FWER <= alpha-ish)."""
+    rng = np.random.default_rng(3)
+    false_hits = 0
+    trials = 30
+    for t in range(trials):
+        db = rng.random((40, 7)) < 0.3
+        labels = np.zeros(40, dtype=bool)
+        labels[rng.choice(40, size=15, replace=False)] = True
+        res = lamp(db, labels, alpha=0.05)
+        false_hits += bool(res.significant)
+    # binomial(30, 0.05): P(>=6) ~ 0.0003 — generous bound, catches gross errors
+    assert false_hits <= 5

@@ -1,0 +1,102 @@
+"""LCM closed-itemset enumeration vs the exponential oracle + closure properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmap import (
+    full_occ,
+    pack_db,
+    support_np,
+    supports_np,
+    unpack_occ,
+)
+from repro.core.lcm import brute_force_closed, closure_np, lcm_closed
+
+
+def random_db(rng, n, m, density):
+    return rng.random((n, m)) < density
+
+
+@st.composite
+def small_dbs(draw):
+    n = draw(st.integers(4, 40))
+    m = draw(st.integers(2, 10))
+    density = draw(st.floats(0.05, 0.8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return random_db(rng, n, m, density)
+
+
+@given(db=small_dbs(), min_sup=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_lcm_matches_bruteforce(db, min_sup):
+    oracle = brute_force_closed(db, min_sup=min_sup)
+    got, stats = lcm_closed(db, min_sup=min_sup)
+    got_dict = {items: sup for items, sup in got}
+    assert len(got) == len(got_dict), "LCM emitted a duplicate closed set"
+    assert got_dict == oracle
+    assert stats.closed_found == len(oracle)
+
+
+@given(db=small_dbs())
+@settings(max_examples=40, deadline=None)
+def test_closure_operator_properties(db):
+    """Closure is extensive, monotone, idempotent (on occurrence bitmaps)."""
+    n, m = db.shape
+    db_bits = pack_db(db)
+    rng = np.random.default_rng(0)
+    items = rng.choice(m, size=min(3, m), replace=False)
+    occ = full_occ(n)
+    for j in items:
+        occ = occ & db_bits[j]
+    clo = closure_np(occ, db_bits)
+    # extensive: any item whose column contains occ is in the closure,
+    # in particular every generator item (if occ nonempty)
+    if support_np(occ) > 0:
+        assert set(items).issubset(set(clo.tolist()))
+    # idempotent: closing the closure's occurrence changes nothing
+    occ2 = full_occ(n)
+    for j in clo:
+        occ2 = occ2 & db_bits[j]
+    assert np.array_equal(occ2, occ) or support_np(occ) == 0
+    clo2 = closure_np(occ2, db_bits)
+    if support_np(occ) > 0:
+        assert np.array_equal(clo, clo2)
+
+
+@given(db=small_dbs())
+@settings(max_examples=30, deadline=None)
+def test_supports_gemm_matches_naive(db):
+    n, m = db.shape
+    db_bits = pack_db(db)
+    occ = full_occ(n)
+    s = supports_np(occ, db_bits)
+    np.testing.assert_array_equal(s, db.sum(axis=0))
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    for n in [1, 31, 32, 33, 64, 97, 697]:
+        db = rng.random((n, 5)) < 0.3
+        bits = pack_db(db)
+        back = np.stack([unpack_occ(bits[j], n) for j in range(5)], axis=1)
+        np.testing.assert_array_equal(back, db)
+
+
+def test_tail_bits_are_zero():
+    db = np.ones((33, 2), dtype=bool)
+    bits = pack_db(db)
+    assert support_np(bits[0]) == 33  # not 64: tail of word 1 must be zero
+    occ = full_occ(33)
+    assert support_np(occ) == 33
+
+
+def test_min_sup_filters():
+    rng = np.random.default_rng(2)
+    db = random_db(rng, 30, 8, 0.4)
+    all_closed, _ = lcm_closed(db, min_sup=1)
+    for ms in [2, 4, 8]:
+        got, _ = lcm_closed(db, min_sup=ms)
+        expect = {(i, s) for i, s in all_closed if s >= ms}
+        assert {(i, s) for i, s in got} == expect
