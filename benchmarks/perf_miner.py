@@ -26,10 +26,10 @@ TRACE = 16384
 P = 16
 
 
-def run_pipeline(db, labels, cfg, fuse):
+def run_pipeline(db, labels, cfg, pipeline):
     t0 = time.time()
     res = lamp_distributed(db, labels, alpha=0.05, cfg=cfg,
-                           devices=jax.devices()[:P], fuse_phase23=fuse)
+                           devices=jax.devices()[:P], pipeline=pipeline)
     wall = time.time() - t0
     phases = res["phase_outputs"]
     steps = sum(p.supersteps for p in phases)
@@ -46,10 +46,10 @@ def run():
     ref = lamp(db, labels, alpha=0.05)
     iterations = []
 
-    def record(name, hypothesis, cfg, fuse, baseline=None):
+    def record(name, hypothesis, cfg, pipeline, baseline=None):
         # warm-up compile, then measure
-        run_pipeline(db, labels, cfg, fuse)
-        res, wall, steps, popped, phases = run_pipeline(db, labels, cfg, fuse)
+        run_pipeline(db, labels, cfg, pipeline)
+        res, wall, steps, popped, phases = run_pipeline(db, labels, cfg, pipeline)
         assert res["min_sup"] == ref.min_sup
         assert res["correction_factor"] == ref.correction_factor
         assert res["n_significant"] == len(ref.significant)
@@ -57,7 +57,7 @@ def run():
         row = {
             "name": name, "hypothesis": hypothesis,
             "expand_batch": cfg.expand_batch, "steal_max": cfg.steal_max,
-            "fused": fuse, "wall_s": round(wall, 2), "supersteps": steps,
+            "pipeline": pipeline, "wall_s": round(wall, 2), "supersteps": steps,
             "popped_total": popped,
             "modeled_T16_s": round(modeled_T(phases, c_node), 4),
             "round_payload_bytes": cfg.steal_max * (db.shape[0] // 32 + 1 + 4) * 4,
@@ -72,14 +72,15 @@ def run():
 
     base_cfg = EngineConfig(expand_batch=16, steal_max=128, trace_cap=TRACE)
     base = record(
-        "baseline", "paper-faithful 3-phase pipeline, B=16, T=128", base_cfg, False
+        "baseline", "paper-faithful 3-phase pipeline, B=16, T=128", base_cfg,
+        "three_phase",
     )
     record(
         "it1-fuse23",
         "phase 3 re-traverses the tree only to re-test (sup,pos_sup) pairs; a "
         "2-D histogram in phase 2 carries the same information -> expect "
         "~1/3 fewer supersteps and ~1/3 less popcount-GEMM work",
-        base_cfg, True, base,
+        base_cfg, "fused23", base,
     )
     for b in (32, 64):
         record(
@@ -88,7 +89,7 @@ def run():
             "amortization); risk: coarser steal granularity worsens tail "
             "balance — expect better modeled T16 until imbalance bites",
             EngineConfig(expand_batch=b, steal_max=128, trace_cap=TRACE),
-            True, base,
+            "fused23", base,
         )
     record(
         "it3-T32",
@@ -96,14 +97,14 @@ def run():
         "oversized: T=32 cuts the per-round ppermute payload 4x with no "
         "makespan change",
         EngineConfig(expand_batch=32, steal_max=32, trace_cap=TRACE),
-        True, base,
+        "fused23", base,
     )
     record(
         "it4-best",
         "combine the winners: fused 2-pass + B=16 (best modeled makespan) + "
         "T=32 (cheap rounds) — expect ~baseline/1.5 makespan",
         EngineConfig(expand_batch=16, steal_max=32, trace_cap=TRACE),
-        True, base,
+        "fused23", base,
     )
     save_json("perf_miner.json", iterations)
     return iterations

@@ -1,50 +1,61 @@
 """Distributed BSP miner: LCM+LAMP with lifeline work stealing (paper §4).
 
 One logical miner per device.  The whole search runs as a single compiled
-`shard_map` program over a 1-D mesh axis "miners":
+`shard_map` program over a 1-D mesh axis "miners"; each superstep
+(`lax.while_loop` body) is a pipeline of three phase modules:
 
-  superstep (lax.while_loop body):
-    1. EXPAND   pop up to `expand_batch` nodes from the local stack; one
-                popcount-GEMM gives every extension's support; deferred-PPC
-                validation, closed-set counting, child generation (core/lcm.py
-                documents the deferred-PPC scheme).
-    2. STEAL    one lifeline/random exchange round (core/lifeline.py): hungry
-                devices (empty stack) send a request bit along the round's
-                permutation; a victim donates half its stack (bottom half =
-                oldest/shallowest subtrees), capped at `steal_max` nodes, via
-                the inverse permutation.  REQUEST/GIVE/REJECT collapses into
-                one paired ppermute exchange (DESIGN.md §2).
-    3. GLOBAL   psum the support histogram -> recompute lambda (paper §4.4:
-                the piggybacked gather/broadcast; staleness only costs work),
-                psum stack sizes -> exact BSP termination test (paper §4.3's
-                DTD is only needed on the async host plane; core/termination.py).
+  1. EXPAND   core/expand.py — pop up to `expand_batch` nodes; one
+              popcount-GEMM gives every extension's support; deferred-PPC
+              validation, closed-set counting, child generation (core/lcm.py
+              documents the deferred-PPC scheme).
+  2. STEAL    core/steal.py — one lifeline/random exchange round over the
+              schedule from core/lifeline.py; REQUEST/GIVE/REJECT collapses
+              into one paired ppermute exchange (DESIGN.md §2).
+  3. GLOBAL   core/global_sync.py — psum the support histogram -> recompute
+              lambda (paper §4.4's piggyback; staleness only costs work),
+              psum stack sizes -> exact BSP termination test (paper §4.3's
+              DTD is only needed on the async host plane).
+
+This module holds only the config, the while-loop driver that wires the
+phases together, and the host-side pre/postprocess; every version-sensitive
+JAX API (shard_map, collectives, mesh) lives in core/collectives.py.
 
 Node payload (fixed size, steal-friendly):  occ [W]u32, core i32, pc i32,
 sup i32, flags i32   (flags bit0: "resume" node — already counted, continues
 child generation past the per-superstep push cap).
 
 Modes:
-  lamp1  dynamic lambda by support increase  -> lambda_final
-  count  static min_sup                      -> k = CS(min_sup)
-  test   static min_sup + delta              -> #significant + sample buffer
+  lamp1   dynamic lambda by support increase  -> lambda_final
+  count   static min_sup                      -> k = CS(min_sup)
+  test    static min_sup + delta              -> #significant + sample buffer
+  count2d static min_sup                      -> 2-D (sup x pos-sup) histogram
+
+LAMP pipelines (`lamp_distributed(..., pipeline=...)`, registry PIPELINES):
+  three_phase   the paper's §3.3 staging: lamp1 -> count -> test
+  fused23       beyond-paper: lamp1 -> count2d; phases 2+3 fall out of the
+                2-D histogram, saving one full traversal
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from . import collectives
 from .bitmap import full_occ, num_words, pack_db, supports_np
-from .fisher import lamp_count_thresholds, fisher_pvalue_jnp
+from .collectives import MINERS_AXIS
+from .expand import build_expand
+from .fisher import lamp_count_thresholds
+from .global_sync import build_global_sync, recompute_lambda
 from .lifeline import LifelineSchedule, build_schedule
+from .steal import build_steal_round
 
 INT_MAX = np.int32(2**31 - 1)
 
@@ -92,17 +103,6 @@ def _thresholds_int(n: int, n_pos: int, alpha: float) -> np.ndarray:
     return out
 
 
-def _supports(occ_nodes, db_mw, db_wm, impl):
-    if impl == "ref":
-        inter = occ_nodes[:, None, :] & db_mw[None, :, :]
-        return jnp.sum(lax.population_count(inter), axis=-1).astype(jnp.int32)
-    from repro.kernels.support_count.ops import support_counts
-
-    return support_counts(
-        occ_nodes, db_wm, interpret=(impl == "pallas_interpret")
-    )
-
-
 def preprocess(db_bool: np.ndarray, n_proc: int, cfg: EngineConfig, min_sup: int = 1):
     """Paper §4.5: expand the root on the host, deal depth-1 nodes round-robin.
 
@@ -133,163 +133,16 @@ def preprocess(db_bool: np.ndarray, n_proc: int, cfg: EngineConfig, min_sup: int
     return db_bits, init_occ, init_meta, init_sp, n
 
 
-def _make_steal_round(schedule: LifelineSchedule, cfg: EngineConfig, w: int, axis: str):
-    """Returns steal_round(t, occ_stack, meta, sp) -> (occ_stack, meta, sp, got, gave, k_given)."""
-    T = cfg.steal_max
-    cap = cfg.stack_cap
-
-    def one_round(req_pairs, rep_pairs, occ_stack, meta, sp):
-        hungry = (sp == 0).astype(jnp.int32)
-        req_in = lax.ppermute(hungry, axis, perm=list(req_pairs))
-        donate = (req_in > 0) & (sp > 1)
-        k = jnp.where(donate, jnp.minimum(sp // 2, T), 0)
-        rows = jnp.arange(T)
-        pay_mask = rows < k
-        pay_occ = jnp.where(pay_mask[:, None], occ_stack[:T], 0)
-        pay_meta = jnp.where(pay_mask[:, None], meta[:T], 0)
-        # remove donated bottom-k, shift stack down
-        idx = jnp.arange(cap) + k
-        occ_stack = jnp.take(occ_stack, idx, axis=0, mode="fill", fill_value=0)
-        meta = jnp.take(meta, idx, axis=0, mode="fill", fill_value=0)
-        sp = sp - k
-        # reply to (the only possible) requester
-        recv_k = lax.ppermute(k, axis, perm=list(rep_pairs))
-        recv_occ = lax.ppermute(pay_occ, axis, perm=list(rep_pairs))
-        recv_meta = lax.ppermute(pay_meta, axis, perm=list(rep_pairs))
-        got = recv_k > 0  # only ever true for requesters (they had sp == 0)
-        wmask = (rows < recv_k)[:, None]
-        occ_stack = occ_stack.at[:T].set(jnp.where(wmask, recv_occ, occ_stack[:T]))
-        meta = meta.at[:T].set(jnp.where(wmask, recv_meta, meta[:T]))
-        sp = jnp.where(got, recv_k, sp)
-        return occ_stack, meta, sp, got.astype(jnp.int32), donate.astype(jnp.int32), k
-
-    branches = [
-        functools.partial(one_round, req, rep) for (req, rep) in schedule.rounds
-    ]
-
-    def steal_round(t, occ_stack, meta, sp):
-        return lax.switch(t % schedule.n_rounds, branches, occ_stack, meta, sp)
-
-    return steal_round
-
-
 def build_mine_step(
-    *, n: int, n_pos: int, m: int, w: int, cfg: EngineConfig,
-    schedule: LifelineSchedule, mode: str, axis: str = "miners",
+    *, n: int, n_pos: int, m: int, cfg: EngineConfig,
+    schedule: LifelineSchedule, mode: str, axis: str = MINERS_AXIS,
 ):
-    """Returns the per-device BSP program body used under shard_map."""
-    B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
+    """Wire the superstep phases into the per-device BSP program body."""
     NB = n + 2
     NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
-    steal_round = _make_steal_round(schedule, cfg, w, axis)
-    dyn_lambda = mode == "lamp1"
-    testing = mode == "test"
-    hist2d_mode = mode == "count2d"
-
-    def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-               pos_mask, out_buf, out_ptr, delta):
-        take = jnp.minimum(sp, B)
-        rows = jnp.arange(B)
-        node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
-        row_valid = rows < take
-        occ_nodes = occ_stack[node_idx]          # [B, W]
-        meta_nodes = meta[node_idx]              # [B, 4]
-        core = meta_nodes[:, 0]
-        pc = meta_nodes[:, 1]
-        sup = meta_nodes[:, 2]
-        flags = meta_nodes[:, 3]
-        sp_after = sp - take
-
-        alive = row_valid & (sup >= lam)
-        supports = _supports(occ_nodes, db_mw, db_wm, cfg.kernel_impl)  # [B, M]
-        item_ids = jnp.arange(m)[None, :]
-        in_clo = supports == sup[:, None]
-        prefix_ct = jnp.sum(in_clo & (item_ids < core[:, None]), axis=1)
-        is_resume = (flags & 1) == 1
-        ppc_ok = is_resume | (core < 0) | (prefix_ct == pc)
-        accepted = alive & ppc_ok
-        counted = accepted & (~is_resume)
-
-        hist = hist.at[jnp.clip(sup, 0, NB - 1)].add(counted.astype(jnp.int32))
-        if hist2d_mode:
-            pos_sup2 = jnp.sum(
-                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
-            ).astype(jnp.int32)
-            cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup2, 0, n_pos)
-            hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
-
-        sig_cnt = jnp.int32(0)
-        if testing:
-            pos_sup = jnp.sum(
-                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
-            ).astype(jnp.int32)
-            pvals = fisher_pvalue_jnp(sup, pos_sup, n, n_pos)
-            sig = counted & (pvals <= delta)
-            sig_cnt = jnp.sum(sig.astype(jnp.int32))
-            # append (sup, pos_sup) samples of significant sets
-            sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]
-            pos = jnp.where(sig_idx >= 0, out_ptr + jnp.arange(B), cfg.out_cap + 1)
-            vals = jnp.stack(
-                [sup[jnp.clip(sig_idx, 0, B - 1)], pos_sup[jnp.clip(sig_idx, 0, B - 1)]],
-                axis=1,
-            )
-            out_buf = out_buf.at[pos].set(vals, mode="drop")
-            out_ptr = jnp.minimum(out_ptr + sig_cnt, cfg.out_cap)
-
-        # ---- children
-        cand = (
-            accepted[:, None]
-            & (item_ids > core[:, None])
-            & (supports < sup[:, None])
-            & (supports >= lam)
-        )
-        clo_cum_excl = jnp.cumsum(in_clo.astype(jnp.int32), axis=1) - in_clo.astype(jnp.int32)
-        flat = cand.reshape(-1)
-        cand_idx = jnp.nonzero(flat, size=C, fill_value=-1)[0]
-        valid_child = cand_idx >= 0
-        n_taken = jnp.sum(valid_child.astype(jnp.int32))
-        child_b = jnp.clip(cand_idx // m, 0, B - 1)
-        child_j = jnp.clip(cand_idx % m, 0, m - 1)
-        child_occ = occ_nodes[child_b] & db_mw[child_j]
-        child_meta = jnp.stack(
-            [
-                child_j,
-                clo_cum_excl[child_b, child_j],
-                supports[child_b, child_j],
-                jnp.zeros_like(child_j),
-            ],
-            axis=1,
-        )
-        push_pos = jnp.where(valid_child, sp_after + jnp.arange(C), CAP + C)
-        overflow = jnp.any(valid_child & (push_pos >= CAP))
-        occ_stack = occ_stack.at[push_pos].set(child_occ, mode="drop")
-        meta = meta.at[push_pos].set(child_meta, mode="drop")
-        sp2 = jnp.minimum(sp_after + n_taken, CAP)
-
-        # ---- resume parents whose children overflowed the push cap
-        row_counts = jnp.sum(cand.astype(jnp.int32), axis=1)
-        row_offset = jnp.cumsum(row_counts) - row_counts
-        taken_per_row = jnp.clip(C - row_offset, 0, row_counts)
-        needs_resume = accepted & (taken_per_row < row_counts)
-        pos_in_row = jnp.cumsum(cand.astype(jnp.int32), axis=1) - cand.astype(jnp.int32)
-        first_untaken = cand & (pos_in_row == taken_per_row[:, None])
-        cursor = jnp.argmax(first_untaken, axis=1)  # first candidate not pushed
-        res_meta = jnp.stack(
-            [cursor - 1, jnp.zeros(B, jnp.int32), sup, jnp.ones(B, jnp.int32)], axis=1
-        )
-        res_pos = jnp.where(needs_resume, sp2 + jnp.cumsum(needs_resume) - 1, CAP + C)
-        overflow = overflow | jnp.any(needs_resume & (res_pos >= CAP))
-        occ_stack = occ_stack.at[res_pos].set(occ_nodes, mode="drop")
-        meta = meta.at[res_pos].set(res_meta, mode="drop")
-        sp3 = jnp.minimum(sp2 + jnp.sum(needs_resume.astype(jnp.int32)), CAP)
-
-        stats = stats.at[0].add(jnp.sum(alive.astype(jnp.int32)))
-        stats = stats.at[1].add(jnp.sum((alive & ~ppc_ok).astype(jnp.int32)))
-        stats = stats.at[2].add(jnp.sum(counted.astype(jnp.int32)))
-        stats = stats.at[3].add(n_taken)
-        stats = stats.at[8].add(overflow.astype(jnp.int32))
-        return (occ_stack, meta, sp3, hist, hist2d, stats, out_buf, out_ptr,
-                sig_cnt)
+    expand = build_expand(n=n, n_pos=n_pos, m=m, cfg=cfg, mode=mode)
+    steal_round = build_steal_round(schedule, cfg, axis)
+    global_sync = build_global_sync(nb=NB, mode=mode, axis=axis)
 
     def body(carry, db_mw, db_wm, pos_mask, thr, delta):
         (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_buf, out_ptr,
@@ -313,17 +166,7 @@ def build_mine_step(
         stats = stats.at[6].add((sp == 0).astype(jnp.int32))
         stats = stats.at[7].add(1)
 
-        if dyn_lambda:
-            # one fused collective: [histogram | stack size] (paper §4.4's
-            # piggyback of the counter onto the termination traffic)
-            packed = lax.psum(jnp.concatenate([hist, sp[None]]), axis)
-            g_hist, work = packed[:NB], packed[NB]
-            cs = jnp.cumsum(g_hist[::-1])[::-1]  # cs[x] = #closed with sup >= x
-            cond = cs > thr
-            best = jnp.max(jnp.where(cond, jnp.arange(NB), 0))
-            lam = jnp.maximum(lam, jnp.maximum(best + 1, 1)).astype(jnp.int32)
-        else:
-            work = lax.psum(sp, axis)
+        lam, work = global_sync(hist, sp, lam, thr)
         return (occ_stack, meta, sp, hist, hist2d, lam, t + 1, stats, out_buf,
                 out_ptr, n_sig, trace, work)
 
@@ -343,11 +186,12 @@ def build_mine_step(
         trace = jnp.zeros(max(cfg.trace_cap, 1), jnp.int32)
 
         def cond_fn(carry):
-            t = carry[5]
-            work = carry[-1]  # psum'd at the previous superstep boundary:
+            (_occ, _meta, _sp, _hist, _hist2d, _lam, t, _stats, _out_buf,
+             _out_ptr, _n_sig, _trace, work) = carry
+            # work was psum'd at the previous superstep boundary:
             return (work > 0) & (t < cfg.max_steps)  # exact BSP termination
 
-        work0 = lax.psum(sp, axis)
+        work0 = collectives.psum(sp, axis)
         carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_buf,
                  out_ptr, n_sig, trace, work0)
         carry = lax.while_loop(
@@ -355,9 +199,9 @@ def build_mine_step(
         )
         (_, _, _, hist, hist2d, lam, t, stats, out_buf, out_ptr, n_sig, trace,
          _) = carry
-        g_hist = lax.psum(hist, axis)
-        g_hist2d = lax.psum(hist2d, axis)  # once, at termination — not per step
-        g_sig = lax.psum(n_sig, axis)
+        g_hist = collectives.psum(hist, axis)
+        g_hist2d = collectives.psum(hist2d, axis)  # once, at termination — not per step
+        g_sig = collectives.psum(n_sig, axis)
         return (
             g_hist, lam, t, stats[None], out_buf[None], out_ptr[None], g_sig,
             trace[None], g_hist2d,
@@ -385,7 +229,7 @@ def mine(
     if devices is None:
         devices = jax.devices()
     n_proc = len(devices)
-    mesh = Mesh(np.array(devices), ("miners",))
+    mesh = collectives.make_miner_mesh(devices)
     schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
 
     if labels is not None:
@@ -403,19 +247,18 @@ def mine(
     thr = _thresholds_int(n, n_pos, alpha)
 
     program = build_mine_step(
-        n=n, n_pos=n_pos, m=m, w=w, cfg=cfg, schedule=schedule, mode=mode
+        n=n, n_pos=n_pos, m=m, cfg=cfg, schedule=schedule, mode=mode
     )
-    shardy = jax.shard_map(
+    shardy = collectives.shard_map(
         program,
         mesh=mesh,
         in_specs=(
-            P("miners"), P("miners"), P("miners"),  # stacks
+            P(MINERS_AXIS), P(MINERS_AXIS), P(MINERS_AXIS),  # stacks
             P(), P(), P(), P(),  # db_mw, db_wm, pos_mask, thr
             P(), P(),  # lam0, delta
         ),
-        out_specs=(P(), P(), P(), P("miners"), P("miners"), P("miners"), P(),
-                   P("miners"), P()),
-        check_vma=False,
+        out_specs=(P(), P(), P(), P(MINERS_AXIS), P(MINERS_AXIS),
+                   P(MINERS_AXIS), P(), P(MINERS_AXIS), P()),
     )
     lam0 = np.int32(start_sup)
     out = jax.jit(shardy)(
@@ -431,10 +274,7 @@ def mine(
         g_hist[root_sup] += 1
         if mode == "lamp1":
             # replay the lambda recursion including the root contribution
-            cs = np.cumsum(g_hist[::-1])[::-1]
-            cond = cs > thr
-            best = int(np.max(np.where(cond, np.arange(len(g_hist)), 0)))
-            lam = max(int(lam), best + 1, 1)
+            lam = int(recompute_lambda(g_hist, thr, int(lam), xp=np))
 
     stats_dict = {name: stats[:, i] for i, name in enumerate(STAT_NAMES)}
     if np.any(stats_dict["overflow"]):
@@ -475,49 +315,11 @@ def mine(
     )
 
 
-def lamp_distributed(
-    db_bool: np.ndarray,
-    labels: np.ndarray,
-    alpha: float = 0.05,
-    cfg: EngineConfig = EngineConfig(),
-    devices=None,
-    fuse_phase23: bool = False,
-):
-    """Full distributed LAMP (paper §3.3 + §4). Returns a dict.
-
-    fuse_phase23=True (beyond-paper, EXPERIMENTS.md §Perf): one enumeration
-    pass builds a 2-D (support x pos-support) histogram; P-values depend only
-    on that pair, so the correction factor AND the significant count both fall
-    out of the histogram — the third engine pass disappears entirely.
-    """
-    # phase 1: support increase -> lambda_final, min_sup
+# --------------------------------------------------------------- pipelines
+def _pipeline_three_phase(db_bool, labels, alpha, cfg, devices):
+    """The paper's §3.3 staging: lamp1 -> count -> test (three traversals)."""
     p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
     min_sup = max(p1.lam_final - 1, 1)
-
-    if fuse_phase23:
-        n = db_bool.shape[0]
-        n_pos = int(np.asarray(labels, bool).sum())
-        p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, cfg=cfg,
-                  devices=devices)
-        h2 = p2.hist2d
-        sups_grid = np.arange(n + 1)
-        mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
-        k = int(h2[mask].sum())
-        delta = alpha / max(k, 1)
-        xs, ns = np.nonzero(mask)
-        from .fisher import fisher_pvalue
-
-        pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
-        sig_mask = pv <= delta
-        n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
-        return {
-            "lambda_final": p1.lam_final,
-            "min_sup": min_sup,
-            "correction_factor": k,
-            "delta": delta,
-            "n_significant": n_sig,
-            "phase_outputs": (p1, p2),
-        }
 
     # phase 2: exact closed-set count at min_sup
     p2 = mine(db_bool, labels, mode="count", min_sup=min_sup, cfg=cfg, devices=devices)
@@ -536,3 +338,77 @@ def lamp_distributed(
         "n_significant": p3.sig_count,
         "phase_outputs": (p1, p2, p3),
     }
+
+
+def _pipeline_fused23(db_bool, labels, alpha, cfg, devices):
+    """Beyond-paper (EXPERIMENTS.md §Perf): lamp1 -> count2d, two traversals.
+
+    One enumeration pass builds a 2-D (support x pos-support) histogram;
+    P-values depend only on that pair, so the correction factor AND the
+    significant count both fall out of the histogram — the third engine pass
+    disappears entirely.
+    """
+    p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
+    min_sup = max(p1.lam_final - 1, 1)
+
+    n = db_bool.shape[0]
+    n_pos = int(np.asarray(labels, bool).sum())
+    p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, cfg=cfg,
+              devices=devices)
+    h2 = p2.hist2d
+    sups_grid = np.arange(n + 1)
+    mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
+    k = int(h2[mask].sum())
+    delta = alpha / max(k, 1)
+    xs, ns = np.nonzero(mask)
+    from .fisher import fisher_pvalue
+
+    pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
+    sig_mask = pv <= delta
+    n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
+    return {
+        "lambda_final": p1.lam_final,
+        "min_sup": min_sup,
+        "correction_factor": k,
+        "delta": delta,
+        "n_significant": n_sig,
+        "phase_outputs": (p1, p2),
+    }
+
+
+#: First-class LAMP pipeline registry — select with
+#: `lamp_distributed(..., pipeline=<name>)`; extend by registering here.
+PIPELINES: dict[str, Callable] = {
+    "three_phase": _pipeline_three_phase,
+    "fused23": _pipeline_fused23,
+}
+
+
+def lamp_distributed(
+    db_bool: np.ndarray,
+    labels: np.ndarray,
+    alpha: float = 0.05,
+    cfg: EngineConfig = EngineConfig(),
+    devices=None,
+    fuse_phase23: bool = False,
+    pipeline: str | None = None,
+):
+    """Full distributed LAMP (paper §3.3 + §4). Returns a dict.
+
+    The phase staging is pluggable: `pipeline` names an entry in PIPELINES
+    ("three_phase" | "fused23").  `fuse_phase23=True` is the backward-
+    compatible alias for pipeline="fused23".
+    """
+    if pipeline is None:
+        pipeline = "fused23" if fuse_phase23 else "three_phase"
+    elif fuse_phase23 and pipeline != "fused23":
+        raise ValueError(
+            f"fuse_phase23=True conflicts with pipeline={pipeline!r}"
+        )
+    try:
+        run = PIPELINES[pipeline]
+    except KeyError:
+        raise ValueError(
+            f"unknown pipeline {pipeline!r}; available: {sorted(PIPELINES)}"
+        ) from None
+    return run(db_bool, labels, alpha, cfg, devices)

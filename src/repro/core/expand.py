@@ -1,0 +1,155 @@
+"""Superstep phase 1 — EXPAND: popcount-GEMM expansion + deferred-PPC.
+
+Pops up to `expand_batch` nodes from the local stack; one popcount-GEMM
+(`supports_gemm`) gives every extension's support; deferred-PPC validation,
+closed-set counting, significance sampling (mode="test"), 2-D histogram
+accumulation (mode="count2d"), child generation, and the resume-node path
+for parents whose children overflowed the per-superstep push cap
+(core/lcm.py documents the deferred-PPC scheme).
+
+This phase is pure per-miner compute — no collectives — so it is the natural
+unit to retarget at an accelerator kernel: `supports_gemm` dispatches on
+`cfg.kernel_impl` between the jnp reference contraction and the Pallas
+popcount-GEMM (kernels/support_count).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .fisher import fisher_pvalue_jnp
+
+__all__ = ["supports_gemm", "build_expand"]
+
+
+def supports_gemm(occ_nodes, db_mw, db_wm, impl: str):
+    """[B, W] x [M, W] -> [B, M] support counts; impl selects the kernel."""
+    if impl == "ref":
+        inter = occ_nodes[:, None, :] & db_mw[None, :, :]
+        return jnp.sum(lax.population_count(inter), axis=-1).astype(jnp.int32)
+    from repro.kernels.support_count.ops import support_counts
+
+    return support_counts(
+        occ_nodes, db_wm, interpret=(impl == "pallas_interpret")
+    )
+
+
+def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
+    """Returns the expand phase for one superstep.
+
+    expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
+           pos_mask, out_buf, out_ptr, delta)
+      -> (occ_stack, meta, sp, hist, hist2d, stats, out_buf, out_ptr, sig_cnt)
+    """
+    B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
+    NB = n + 2
+    testing = mode == "test"
+    hist2d_mode = mode == "count2d"
+
+    def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
+               pos_mask, out_buf, out_ptr, delta):
+        take = jnp.minimum(sp, B)
+        rows = jnp.arange(B)
+        node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
+        row_valid = rows < take
+        occ_nodes = occ_stack[node_idx]          # [B, W]
+        meta_nodes = meta[node_idx]              # [B, 4]
+        core = meta_nodes[:, 0]
+        pc = meta_nodes[:, 1]
+        sup = meta_nodes[:, 2]
+        flags = meta_nodes[:, 3]
+        sp_after = sp - take
+
+        alive = row_valid & (sup >= lam)
+        supports = supports_gemm(occ_nodes, db_mw, db_wm, cfg.kernel_impl)  # [B, M]
+        item_ids = jnp.arange(m)[None, :]
+        in_clo = supports == sup[:, None]
+        prefix_ct = jnp.sum(in_clo & (item_ids < core[:, None]), axis=1)
+        is_resume = (flags & 1) == 1
+        ppc_ok = is_resume | (core < 0) | (prefix_ct == pc)
+        accepted = alive & ppc_ok
+        counted = accepted & (~is_resume)
+
+        hist = hist.at[jnp.clip(sup, 0, NB - 1)].add(counted.astype(jnp.int32))
+        if hist2d_mode:
+            pos_sup2 = jnp.sum(
+                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
+            ).astype(jnp.int32)
+            cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup2, 0, n_pos)
+            hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
+
+        sig_cnt = jnp.int32(0)
+        if testing:
+            pos_sup = jnp.sum(
+                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
+            ).astype(jnp.int32)
+            pvals = fisher_pvalue_jnp(sup, pos_sup, n, n_pos)
+            sig = counted & (pvals <= delta)
+            sig_cnt = jnp.sum(sig.astype(jnp.int32))
+            # append (sup, pos_sup) samples of significant sets
+            sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]
+            pos = jnp.where(sig_idx >= 0, out_ptr + jnp.arange(B), cfg.out_cap + 1)
+            vals = jnp.stack(
+                [sup[jnp.clip(sig_idx, 0, B - 1)], pos_sup[jnp.clip(sig_idx, 0, B - 1)]],
+                axis=1,
+            )
+            out_buf = out_buf.at[pos].set(vals, mode="drop")
+            out_ptr = jnp.minimum(out_ptr + sig_cnt, cfg.out_cap)
+
+        # ---- children
+        cand = (
+            accepted[:, None]
+            & (item_ids > core[:, None])
+            & (supports < sup[:, None])
+            & (supports >= lam)
+        )
+        clo_cum_excl = jnp.cumsum(in_clo.astype(jnp.int32), axis=1) - in_clo.astype(jnp.int32)
+        flat = cand.reshape(-1)
+        cand_idx = jnp.nonzero(flat, size=C, fill_value=-1)[0]
+        valid_child = cand_idx >= 0
+        n_taken = jnp.sum(valid_child.astype(jnp.int32))
+        child_b = jnp.clip(cand_idx // m, 0, B - 1)
+        child_j = jnp.clip(cand_idx % m, 0, m - 1)
+        child_occ = occ_nodes[child_b] & db_mw[child_j]
+        child_meta = jnp.stack(
+            [
+                child_j,
+                clo_cum_excl[child_b, child_j],
+                supports[child_b, child_j],
+                jnp.zeros_like(child_j),
+            ],
+            axis=1,
+        )
+        push_pos = jnp.where(valid_child, sp_after + jnp.arange(C), CAP + C)
+        overflow = jnp.any(valid_child & (push_pos >= CAP))
+        occ_stack = occ_stack.at[push_pos].set(child_occ, mode="drop")
+        meta = meta.at[push_pos].set(child_meta, mode="drop")
+        sp2 = jnp.minimum(sp_after + n_taken, CAP)
+
+        # ---- resume parents whose children overflowed the push cap
+        row_counts = jnp.sum(cand.astype(jnp.int32), axis=1)
+        row_offset = jnp.cumsum(row_counts) - row_counts
+        taken_per_row = jnp.clip(C - row_offset, 0, row_counts)
+        needs_resume = accepted & (taken_per_row < row_counts)
+        pos_in_row = jnp.cumsum(cand.astype(jnp.int32), axis=1) - cand.astype(jnp.int32)
+        first_untaken = cand & (pos_in_row == taken_per_row[:, None])
+        cursor = jnp.argmax(first_untaken, axis=1)  # first candidate not pushed
+        res_meta = jnp.stack(
+            [cursor - 1, jnp.zeros(B, jnp.int32), sup, jnp.ones(B, jnp.int32)], axis=1
+        )
+        res_pos = jnp.where(needs_resume, sp2 + jnp.cumsum(needs_resume) - 1, CAP + C)
+        overflow = overflow | jnp.any(needs_resume & (res_pos >= CAP))
+        occ_stack = occ_stack.at[res_pos].set(occ_nodes, mode="drop")
+        meta = meta.at[res_pos].set(res_meta, mode="drop")
+        sp3 = jnp.minimum(sp2 + jnp.sum(needs_resume.astype(jnp.int32)), CAP)
+
+        stats = stats.at[0].add(jnp.sum(alive.astype(jnp.int32)))
+        stats = stats.at[1].add(jnp.sum((alive & ~ppc_ok).astype(jnp.int32)))
+        stats = stats.at[2].add(jnp.sum(counted.astype(jnp.int32)))
+        stats = stats.at[3].add(n_taken)
+        stats = stats.at[8].add(overflow.astype(jnp.int32))
+        return (occ_stack, meta, sp3, hist, hist2d, stats, out_buf, out_ptr,
+                sig_cnt)
+
+    return expand

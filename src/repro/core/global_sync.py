@@ -1,0 +1,55 @@
+"""Superstep phase 3 — GLOBAL: fused histogram psum, lambda, termination.
+
+mode="lamp1": one fused collective carries [histogram | stack size] — the
+paper §4.4's piggyback of the frequency counter onto the termination traffic
+(staleness only costs work, never correctness) — then lambda is recomputed
+from the global histogram.  Other modes psum only the stack sizes.
+
+The returned `work` (global outstanding nodes) drives the exact BSP
+termination test: `work == 0` at a superstep boundary implies no work and no
+in-flight messages, because collectives complete before the check (paper
+§4.3's DTD is only needed on the async host plane; core/termination.py).
+
+`recompute_lambda` is shared between the on-device update (jnp, inside the
+compiled loop) and the host-side replay in `engine.mine()` that folds the
+root closed set into the final lambda (np).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .collectives import MINERS_AXIS, psum
+
+__all__ = ["recompute_lambda", "build_global_sync"]
+
+
+def recompute_lambda(g_hist, thr, lam, xp=jnp):
+    """Largest lambda with CS(lambda) <= thr, never decreasing (paper §3.2).
+
+    g_hist [NB] global closed-set histogram, thr [NB] integer Tarone
+    thresholds, lam the current lambda.  Works for jnp (device) and np (host
+    replay) alike.
+    """
+    nb = g_hist.shape[0]
+    cs = xp.cumsum(g_hist[::-1])[::-1]  # cs[x] = #closed with sup >= x
+    cond = cs > thr
+    best = xp.max(xp.where(cond, xp.arange(nb), 0))
+    return xp.maximum(xp.maximum(lam, best + 1), 1)
+
+
+def build_global_sync(*, nb: int, mode: str, axis: str = MINERS_AXIS):
+    """Returns global_sync(hist, sp, lam, thr) -> (lam, work)."""
+    dyn_lambda = mode == "lamp1"
+
+    def global_sync(hist, sp, lam, thr):
+        if dyn_lambda:
+            # one fused collective: [histogram | stack size]
+            packed = psum(jnp.concatenate([hist, sp[None]]), axis)
+            g_hist, work = packed[:nb], packed[nb]
+            lam = recompute_lambda(g_hist, thr, lam).astype(jnp.int32)
+        else:
+            work = psum(sp, axis)
+        return lam, work
+
+    return global_sync

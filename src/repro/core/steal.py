@@ -1,0 +1,65 @@
+"""Superstep phase 2 — STEAL: one lifeline/random work-exchange round.
+
+Hungry miners (empty stack) send a request bit along the round's permutation;
+a victim donates the bottom half of its stack (oldest/shallowest subtrees),
+capped at `steal_max` nodes, via the inverse permutation.  REQUEST/GIVE/
+REJECT collapses into one paired ppermute exchange (DESIGN.md §2); the round
+schedule (hypercube lifelines interleaved with frozen random permutations)
+comes from core/lifeline.py.
+
+All communication goes through core/collectives.py — this module never
+imports a version-sensitive JAX API directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax import lax
+
+from .collectives import MINERS_AXIS, ppermute
+from .lifeline import LifelineSchedule
+
+__all__ = ["build_steal_round"]
+
+
+def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
+    """Returns steal_round(t, occ_stack, meta, sp)
+    -> (occ_stack, meta, sp, got, gave, k_given)."""
+    T = cfg.steal_max
+    cap = cfg.stack_cap
+
+    def one_round(req_pairs, rep_pairs, occ_stack, meta, sp):
+        hungry = (sp == 0).astype(jnp.int32)
+        req_in = ppermute(hungry, req_pairs, axis)
+        donate = (req_in > 0) & (sp > 1)
+        k = jnp.where(donate, jnp.minimum(sp // 2, T), 0)
+        rows = jnp.arange(T)
+        pay_mask = rows < k
+        pay_occ = jnp.where(pay_mask[:, None], occ_stack[:T], 0)
+        pay_meta = jnp.where(pay_mask[:, None], meta[:T], 0)
+        # remove donated bottom-k, shift stack down
+        idx = jnp.arange(cap) + k
+        occ_stack = jnp.take(occ_stack, idx, axis=0, mode="fill", fill_value=0)
+        meta = jnp.take(meta, idx, axis=0, mode="fill", fill_value=0)
+        sp = sp - k
+        # reply to (the only possible) requester
+        recv_k = ppermute(k, rep_pairs, axis)
+        recv_occ = ppermute(pay_occ, rep_pairs, axis)
+        recv_meta = ppermute(pay_meta, rep_pairs, axis)
+        got = recv_k > 0  # only ever true for requesters (they had sp == 0)
+        wmask = (rows < recv_k)[:, None]
+        occ_stack = occ_stack.at[:T].set(jnp.where(wmask, recv_occ, occ_stack[:T]))
+        meta = meta.at[:T].set(jnp.where(wmask, recv_meta, meta[:T]))
+        sp = jnp.where(got, recv_k, sp)
+        return occ_stack, meta, sp, got.astype(jnp.int32), donate.astype(jnp.int32), k
+
+    branches = [
+        functools.partial(one_round, req, rep) for (req, rep) in schedule.rounds
+    ]
+
+    def steal_round(t, occ_stack, meta, sp):
+        return lax.switch(t % schedule.n_rounds, branches, occ_stack, meta, sp)
+
+    return steal_round

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALL_ARCHS, SHAPES, get_config
+from repro.core.collectives import normalize_cost_analysis
 from repro.launch.hlo_cost import parse_hlo_costs
 from repro.launch.mesh import make_production_mesh, make_rules
 from repro.launch.steps import (
@@ -143,7 +144,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
         parsed = parse_hlo_costs(hlo)
 

@@ -34,8 +34,6 @@ def make_rules(*, multi_pod: bool = False, decode: bool = False) -> ShardingRule
 
 def make_mining_mesh(devices=None):
     """1-D mesh over all devices for the pattern-mining engine."""
-    import numpy as np
+    from ..core.collectives import make_miner_mesh
 
-    if devices is None:
-        devices = jax.devices()
-    return jax.sharding.Mesh(np.array(devices), ("miners",))
+    return make_miner_mesh(devices)

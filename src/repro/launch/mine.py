@@ -29,16 +29,26 @@ def main(argv=None):
     ap.add_argument("--expand-batch", type=int, default=16)
     ap.add_argument("--steal-max", type=int, default=128)
     ap.add_argument("--kernel", default="ref", choices=["ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--pipeline", default="three_phase",
+                    help="LAMP pipeline (an engine.PIPELINES key, e.g. "
+                         "three_phase | fused23)")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args(argv)
 
-    if args.devices and "XLA_FLAGS" not in os.environ:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}"
-        )
+    if args.devices:
+        from repro.core.collectives import force_host_device_count
 
-    from repro.core.engine import EngineConfig, lamp_distributed
+        if not force_host_device_count(args.devices):
+            print(f"[warn] jax already initialized; --devices {args.devices} "
+                  "ignored (set XLA_FLAGS before launch)", file=sys.stderr)
+
+    from repro.core.collectives import device_count
+    from repro.core.engine import PIPELINES, EngineConfig, lamp_distributed
     from repro.data.synthetic import paper_problem
+
+    if args.pipeline not in PIPELINES:
+        ap.error(f"--pipeline: unknown {args.pipeline!r}; "
+                 f"available: {sorted(PIPELINES)}")
 
     db, labels, planted, spec = paper_problem(
         args.problem, args.scale_items, args.scale_trans
@@ -51,21 +61,26 @@ def main(argv=None):
         steal_max=args.steal_max,
         steal_enabled=not args.no_steal,
         kernel_impl=args.kernel,
-        stack_cap=max(8192, 2 * spec.n_items // max(args.devices, 1) + 64),
+        # size per-miner stacks by the devices actually available (forcing
+        # --devices can fail if jax initialized first; see warning above)
+        stack_cap=max(8192, 2 * spec.n_items // max(device_count(), 1) + 64),
     )
     t0 = time.time()
-    res = lamp_distributed(db, labels, alpha=args.alpha, cfg=cfg)
+    res = lamp_distributed(db, labels, alpha=args.alpha, cfg=cfg,
+                           pipeline=args.pipeline)
     dt = time.time() - t0
-    p1, p2, p3 = res["phase_outputs"]
+    phases = res["phase_outputs"]  # 3 for three_phase, 2 for fused23
+    p2 = phases[1]
     out = {
         "problem": spec.name,
+        "pipeline": args.pipeline,
         "lambda": res["lambda_final"],
         "min_sup": res["min_sup"],
         "closed_sets": res["correction_factor"],
         "delta": res["delta"],
         "significant": res["n_significant"],
         "wall_s": round(dt, 3),
-        "supersteps": [p.supersteps for p in (p1, p2, p3)],
+        "supersteps": [p.supersteps for p in phases],
         "per_device_popped": p2.stats["popped"].tolist(),
         "steals": int(sum(p2.stats["steals_got"])),
     }

@@ -13,9 +13,14 @@ import sys
 
 def main():
     spec = json.loads(sys.argv[1])
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={spec['n_devices']} "
-        + os.environ.get("XLA_FLAGS", "")
+    # replace (not just prepend to) any inherited device-count flag — CI runs
+    # the whole suite under --xla_force_host_platform_device_count=8
+    inherited = [
+        f for f in os.environ.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    os.environ["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={spec['n_devices']}"] + inherited
     )
     import numpy as np
 

@@ -92,7 +92,9 @@ def test_expand_batch_sweep():
 
 # ------------------------------------------------------------ subprocess P>=2
 def run_subproc(spec: dict) -> dict:
-    env = dict(os.environ)
+    from repro.core.collectives import host_device_count_env
+
+    env = host_device_count_env(spec["n_devices"])
     env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
     out = subprocess.run(
         [sys.executable, os.path.join(HERE, "engine_subproc_main.py"), json.dumps(spec)],
@@ -151,7 +153,12 @@ def test_pallas_kernel_in_engine():
     got = run_subproc(spec)
     db, labels, _ = small_problem(seed=2, m=16, n=40, density=0.2, n_pos=12)
     seq, _ = lcm_closed(db, min_sup=2)
-    assert int(np.sum(got["hist"])) == len(seq)
+    want = np.zeros(len(got["hist"]), dtype=np.int64)
+    for _, s in seq:
+        want[s] += 1
+    # full histogram (not just the count): the Pallas popcount-GEMM must be
+    # bit-exact against the jnp reference contraction
+    np.testing.assert_array_equal(np.array(got["hist"]), want)
 
 
 def test_fused_phase23_matches_three_phase():

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.fisher import fisher_pvalue, lamp_count_thresholds, min_attainable_pvalue
