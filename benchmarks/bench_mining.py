@@ -1,0 +1,119 @@
+import os
+
+# One miner per simulated device, set before any jax import (same pool shape
+# as benchmarks.run, but self-contained so this entry runs standalone in CI).
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Mining perf baseline: the BSP makespan-model suite on two paper problems.
+
+  PYTHONPATH=src python -m benchmarks.bench_mining            # full baseline
+  PYTHONPATH=src python -m benchmarks.bench_mining --smoke    # CI-sized
+
+Writes BENCH_mining.json at the repo root: per problem, the expanded node
+count, the calibrated per-node cost, measured wall seconds, and the modeled
+speedup vs miner count P (benchmarks/common.py documents the makespan model —
+this container is single-core, so multi-miner wall-clock is meaningless and
+the per-superstep trace gives the exact parallel schedule instead).
+
+The committed BENCH_mining.json is the perf trajectory's anchor: later perf
+PRs rerun this entry point and compare against it.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_mining.json")
+TRACE_CAP = 16384
+
+# two representative Table-1 problems: sparse-wide (hapmap) + dense-tall (mcf7)
+BENCH_PROBLEMS = {
+    "hapmap_dom_10": dict(scale_items=0.08, scale_trans=1.0),
+    "mcf7": dict(scale_items=1.0, scale_trans=0.04),
+}
+SMOKE_PROBLEMS = {
+    "hapmap_dom_10": dict(scale_items=0.03, scale_trans=1.0),
+    "mcf7": dict(scale_items=1.0, scale_trans=0.02),
+}
+
+
+def bench_problem(name: str, scales: dict, p_values) -> dict:
+    from repro.core.engine import EngineConfig, mine
+    from repro.core.lamp import lamp
+    from repro.data.synthetic import paper_problem
+
+    from .common import C_ROUND_S, makespan
+
+    db, labels, _, spec = paper_problem(
+        name, scales["scale_items"], scales["scale_trans"]
+    )
+    ref = lamp(db, labels, alpha=0.05)
+    ms = ref.min_sup
+    devices = jax.devices()
+    cfg = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+
+    # single-device run calibrates c_node (warm-up excludes compile time)
+    mine(db, labels, mode="count", min_sup=ms, cfg=cfg, devices=devices[:1])
+    t0 = time.time()
+    r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg, devices=devices[:1])
+    wall1 = time.time() - t0
+    nodes = int(r1.stats["popped"].sum())
+    c_node = wall1 / max(nodes, 1)
+    t1 = makespan(r1.trace, r1.supersteps, c_node)
+
+    speedup, wall_s = {"1": 1.0}, {"1": round(wall1, 3)}
+    for p in p_values:
+        if p <= 1 or p > len(devices):
+            continue
+        t0 = time.time()
+        rp = mine(db, labels, mode="count", min_sup=ms, cfg=cfg,
+                  devices=devices[:p])
+        wall_s[str(p)] = round(time.time() - t0, 3)
+        tp = makespan(rp.trace, rp.supersteps, c_node)
+        speedup[str(p)] = round(t1 / tp, 3)
+    return {
+        "problem": spec.name,
+        "items": spec.n_items,
+        "transactions": spec.n_transactions,
+        "min_sup": ms,
+        "nodes": nodes,
+        "c_node_us": round(c_node * 1e6, 3),
+        "c_round_us": C_ROUND_S * 1e6,
+        "modeled_speedup_vs_P": speedup,
+        "wall_s": wall_s,
+    }
+
+
+def run(problems: dict, p_values=(1, 2, 4, 8), out_path: str = DEFAULT_OUT) -> dict:
+    t0 = time.time()
+    payload = {
+        "suite": "mining-makespan-baseline",
+        "host_devices": len(jax.devices()),
+        "problems": [bench_problem(n, s, p_values) for n, s in problems.items()],
+        "total_wall_s": None,
+    }
+    payload["total_wall_s"] = round(time.time() - t0, 3)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problems (same schema, smaller scales)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    payload = run(SMOKE_PROBLEMS if args.smoke else BENCH_PROBLEMS,
+                  out_path=args.out)
+    print(json.dumps(payload, indent=1))
+    print(f"[out] {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,9 @@ def main():
           f"lambda={res['lambda_final']} min_sup={res['min_sup']} "
           f"k={res['correction_factor']} significant={res['n_significant']}")
 
+    rs = res["results"]
+    print("\n" + rs.describe(10, planted=planted))
+
     p2 = res["phase_outputs"][1]
     work = p2.stats["popped"]
     print(f"phase-2 work per miner: min={work.min()} mean={work.mean():.0f} "

@@ -9,6 +9,7 @@ import numpy as np
 from repro.core.engine import EngineConfig, lamp_distributed
 from repro.core.lamp import lamp
 from repro.data.synthetic import SyntheticSpec, generate
+from repro.results import score_planted
 
 
 def main():
@@ -35,10 +36,22 @@ def main():
     print(f"\n[engine]     lambda={res['lambda_final']} min_sup={res['min_sup']} "
           f"closed@min_sup={res['correction_factor']} delta={res['delta']:.2e} "
           f"significant={res['n_significant']}")
+    rs = res["results"]  # the mined patterns themselves, not just the count
+    for p in rs.top(5):
+        print(f"   items={list(p.items)} support={p.support} "
+              f"pos={p.pos_support} p={p.pvalue:.3e} q={p.qvalue:.3e}")
+    score = score_planted(rs, planted)
+    print(f"planted itemsets recovered: {len(score['recovered'])}/"
+          f"{score['n_planted']} (recall {score['recall']:.2f})")
+
     assert res["min_sup"] == ref.min_sup
     assert res["correction_factor"] == ref.correction_factor
     assert res["n_significant"] == len(ref.significant)
-    print("\nengine output matches the sequential oracle — OK")
+    got = {(p.items, p.support, p.pos_support) for p in rs}
+    want = {(tuple(sorted(s.items)), s.support, s.pos_support)
+            for s in ref.significant if s.items}
+    assert got == want, "engine pattern identities must match the oracle"
+    print("\nengine patterns match the sequential oracle — OK")
 
 
 if __name__ == "__main__":

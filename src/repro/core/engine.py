@@ -27,8 +27,15 @@ child generation past the per-superstep push cap).
 Modes:
   lamp1   dynamic lambda by support increase  -> lambda_final
   count   static min_sup                      -> k = CS(min_sup)
-  test    static min_sup + delta              -> #significant + sample buffer
-  count2d static min_sup                      -> 2-D (sup x pos-sup) histogram
+  test    static min_sup + delta              -> #significant + pattern records
+  count2d static min_sup (+delta=alpha)       -> 2-D (sup x pos-sup) histogram
+                                                 + alpha-level pattern records
+
+Pattern records (modes "test"/"count2d", DESIGN.md §4): each significant node
+appends (occ [W]u32, core, sup, pos_sup) to a fixed out_cap buffer — the same
+dense payload shape as stack nodes — and repro.results reconstructs the
+closure itemsets host-side; overflowed emissions are counted (emit_dropped)
+and surfaced as a RuntimeWarning from mine().
 
 LAMP pipelines (`lamp_distributed(..., pipeline=...)`, registry PIPELINES):
   three_phase   the paper's §3.3 staging: lamp1 -> count -> test
@@ -38,6 +45,7 @@ LAMP pipelines (`lamp_distributed(..., pipeline=...)`, registry PIPELINES):
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable
 
@@ -61,7 +69,7 @@ INT_MAX = np.int32(2**31 - 1)
 
 STAT_NAMES = (
     "popped", "rejected", "closed", "pushed", "steals_got", "gives",
-    "idle_steps", "supersteps", "overflow", "stolen_nodes",
+    "idle_steps", "supersteps", "overflow", "stolen_nodes", "emit_dropped",
 )
 _NSTAT = len(STAT_NAMES)
 
@@ -92,6 +100,11 @@ class MineOutput:
     sig_pos_sup: np.ndarray | None = None
     trace: np.ndarray | None = None  # [P, trace_cap] popped per superstep
     hist2d: np.ndarray | None = None  # [N+1, Npos+1] (mode="count2d")
+    # emitted pattern records (modes "test"/"count2d"; DESIGN.md §4):
+    sig_occ: np.ndarray | None = None   # [K, W]u32 occurrence bitmaps
+    sig_core: np.ndarray | None = None  # [K] core item of the emitting node
+    emit_dropped: int = 0          # records lost to out_cap saturation
+    db_bits: np.ndarray | None = None  # [M, W]u32 packed DB (reused downstream)
 
 
 def _thresholds_int(n: int, n_pos: int, alpha: float) -> np.ndarray:
@@ -145,13 +158,13 @@ def build_mine_step(
     global_sync = build_global_sync(nb=NB, mode=mode, axis=axis)
 
     def body(carry, db_mw, db_wm, pos_mask, thr, delta):
-        (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_buf, out_ptr,
-         n_sig, trace, _work) = carry
+        (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_occ, out_meta,
+         out_ptr, n_sig, trace, _work) = carry
         popped_before = stats[0]
-        (occ_stack, meta, sp, hist, hist2d, stats, out_buf, out_ptr,
+        (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta, out_ptr,
          sig_cnt) = expand(
             occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-            pos_mask, out_buf, out_ptr, delta,
+            pos_mask, out_occ, out_meta, out_ptr, delta,
         )
         if cfg.trace_cap:
             trace = trace.at[jnp.minimum(t, cfg.trace_cap - 1)].add(
@@ -167,8 +180,8 @@ def build_mine_step(
         stats = stats.at[7].add(1)
 
         lam, work = global_sync(hist, sp, lam, thr)
-        return (occ_stack, meta, sp, hist, hist2d, lam, t + 1, stats, out_buf,
-                out_ptr, n_sig, trace, work)
+        return (occ_stack, meta, sp, hist, hist2d, lam, t + 1, stats, out_occ,
+                out_meta, out_ptr, n_sig, trace, work)
 
     def program(init_occ, init_meta, init_sp, db_mw, db_wm, pos_mask, thr,
                 lam0, delta):
@@ -176,35 +189,37 @@ def build_mine_step(
         occ_stack = init_occ[0]
         meta = init_meta[0]
         sp = init_sp[0]
+        w = occ_stack.shape[-1]
         hist = jnp.zeros(NB, jnp.int32)
         hist2d = jnp.zeros(NB2, jnp.int32)
         stats = jnp.zeros(_NSTAT, jnp.int32)
-        out_buf = jnp.zeros((cfg.out_cap, 2), jnp.int32)
+        out_occ = jnp.zeros((cfg.out_cap, w), jnp.uint32)
+        out_meta = jnp.zeros((cfg.out_cap, 3), jnp.int32)
         out_ptr = jnp.int32(0)
         n_sig = jnp.int32(0)
         t = jnp.int32(0)
         trace = jnp.zeros(max(cfg.trace_cap, 1), jnp.int32)
 
         def cond_fn(carry):
-            (_occ, _meta, _sp, _hist, _hist2d, _lam, t, _stats, _out_buf,
-             _out_ptr, _n_sig, _trace, work) = carry
+            (_occ, _meta, _sp, _hist, _hist2d, _lam, t, _stats, _out_occ,
+             _out_meta, _out_ptr, _n_sig, _trace, work) = carry
             # work was psum'd at the previous superstep boundary:
             return (work > 0) & (t < cfg.max_steps)  # exact BSP termination
 
         work0 = collectives.psum(sp, axis)
-        carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_buf,
-                 out_ptr, n_sig, trace, work0)
+        carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_occ,
+                 out_meta, out_ptr, n_sig, trace, work0)
         carry = lax.while_loop(
             cond_fn, lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta), carry
         )
-        (_, _, _, hist, hist2d, lam, t, stats, out_buf, out_ptr, n_sig, trace,
-         _) = carry
+        (_, _, _, hist, hist2d, lam, t, stats, out_occ, out_meta, out_ptr,
+         n_sig, trace, _) = carry
         g_hist = collectives.psum(hist, axis)
         g_hist2d = collectives.psum(hist2d, axis)  # once, at termination — not per step
         g_sig = collectives.psum(n_sig, axis)
         return (
-            g_hist, lam, t, stats[None], out_buf[None], out_ptr[None], g_sig,
-            trace[None], g_hist2d,
+            g_hist, lam, t, stats[None], out_occ[None], out_meta[None],
+            out_ptr[None], g_sig, trace[None], g_hist2d,
         )
 
     return program
@@ -258,7 +273,7 @@ def mine(
             P(), P(),  # lam0, delta
         ),
         out_specs=(P(), P(), P(), P(MINERS_AXIS), P(MINERS_AXIS),
-                   P(MINERS_AXIS), P(), P(MINERS_AXIS), P()),
+                   P(MINERS_AXIS), P(MINERS_AXIS), P(), P(MINERS_AXIS), P()),
     )
     lam0 = np.int32(start_sup)
     out = jax.jit(shardy)(
@@ -266,7 +281,7 @@ def mine(
         db_bits, np.ascontiguousarray(db_bits.T), pos_mask_bits, thr,
         lam0, np.float32(delta),
     )
-    (g_hist, lam, t, stats, out_buf, out_ptr, g_sig, trace,
+    (g_hist, lam, t, stats, out_occ, out_meta, out_ptr, g_sig, trace,
      g_hist2d) = jax.tree.map(np.asarray, out)
     # count the root closed set (clo of the empty itemset), support = N
     g_hist = g_hist.copy()
@@ -282,13 +297,29 @@ def mine(
     if int(t) >= cfg.max_steps:
         raise RuntimeError("engine hit max_steps before termination")
 
-    sig_sup = sig_pos = None
+    sig_sup = sig_pos = sig_occ = sig_core = None
     n_sig = int(g_sig)
+    emit_dropped = int(stats_dict["emit_dropped"].sum())
+    if mode in ("test", "count2d"):
+        # cross-device gather of the emitted pattern records
+        ptrs = out_ptr.reshape(-1)
+        occ_rows = [out_occ[p, : int(ptrs[p])] for p in range(n_proc)]
+        meta_rows = [out_meta[p, : int(ptrs[p])] for p in range(n_proc)]
+        sig_occ = (np.concatenate(occ_rows, axis=0) if occ_rows
+                   else np.zeros((0, w), np.uint32))
+        allmeta = (np.concatenate(meta_rows, axis=0) if meta_rows
+                   else np.zeros((0, 3), np.int32))
+        sig_core, sig_sup, sig_pos = allmeta[:, 0], allmeta[:, 1], allmeta[:, 2]
+        if emit_dropped:
+            warnings.warn(
+                f"pattern emission overflow: {emit_dropped} significant records "
+                f"dropped (out_cap={cfg.out_cap} saturated); counts stay exact "
+                "but the emitted pattern set is incomplete — raise "
+                "EngineConfig.out_cap",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     if mode == "test":
-        bufs, ptrs = out_buf, out_ptr.reshape(-1)
-        rows = [bufs[p, : int(ptrs[p])] for p in range(n_proc)]
-        allrows = np.concatenate(rows, axis=0) if rows else np.zeros((0, 2), np.int32)
-        sig_sup, sig_pos = allrows[:, 0], allrows[:, 1]
         # root significance (host-side, same test as on device)
         if root_sup >= start_sup and labels is not None:
             from .fisher import fisher_pvalue
@@ -312,10 +343,32 @@ def mine(
         sig_pos_sup=sig_pos,
         trace=trace if cfg.trace_cap else None,
         hist2d=hist2d,
+        sig_occ=sig_occ,
+        sig_core=sig_core,
+        emit_dropped=emit_dropped,
+        db_bits=db_bits,
     )
 
 
 # --------------------------------------------------------------- pipelines
+def _build_results(db_bool, labels, phase_out, *, alpha, min_sup, k, delta,
+                   filter_host):
+    """Emitted records of one phase output -> ResultSet (repro.results)."""
+    from repro.results import build_result_set
+
+    db_bool = np.asarray(db_bool, dtype=bool)
+    labels = np.asarray(labels, dtype=bool)
+    # the phase already packed the database; never re-pack at GWAS scale
+    db_bits = (phase_out.db_bits if phase_out.db_bits is not None
+               else pack_db(db_bool))
+    return build_result_set(
+        phase_out.sig_occ, phase_out.sig_sup, phase_out.sig_pos_sup, db_bits,
+        n=db_bool.shape[0], n_pos=int(labels.sum()), alpha=alpha,
+        min_sup=min_sup, correction_factor=k, delta=delta,
+        filter_host=filter_host, dropped=phase_out.emit_dropped,
+    )
+
+
 def _pipeline_three_phase(db_bool, labels, alpha, cfg, devices):
     """The paper's §3.3 staging: lamp1 -> count -> test (three traversals)."""
     p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
@@ -330,12 +383,18 @@ def _pipeline_three_phase(db_bool, labels, alpha, cfg, devices):
         db_bool, labels, mode="test", min_sup=min_sup, delta=delta,
         cfg=cfg, devices=devices,
     )
+    # the device already filtered at delta; reconstruct + exact stats only
+    results = _build_results(
+        db_bool, labels, p3, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
+        filter_host=False,
+    )
     return {
         "lambda_final": p1.lam_final,
         "min_sup": min_sup,
         "correction_factor": k,
         "delta": delta,
         "n_significant": p3.sig_count,
+        "results": results,
         "phase_outputs": (p1, p2, p3),
     }
 
@@ -346,15 +405,17 @@ def _pipeline_fused23(db_bool, labels, alpha, cfg, devices):
     One enumeration pass builds a 2-D (support x pos-support) histogram;
     P-values depend only on that pair, so the correction factor AND the
     significant count both fall out of the histogram — the third engine pass
-    disappears entirely.
+    disappears entirely.  The same pass emits alpha-level pattern records
+    (delta <= alpha always), which the host filters down to the exact final
+    delta, so pattern identities survive the fusion too (DESIGN.md §4).
     """
     p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
     min_sup = max(p1.lam_final - 1, 1)
 
     n = db_bool.shape[0]
     n_pos = int(np.asarray(labels, bool).sum())
-    p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, cfg=cfg,
-              devices=devices)
+    p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, delta=alpha,
+              cfg=cfg, devices=devices)
     h2 = p2.hist2d
     sups_grid = np.arange(n + 1)
     mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
@@ -366,12 +427,18 @@ def _pipeline_fused23(db_bool, labels, alpha, cfg, devices):
     pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
     sig_mask = pv <= delta
     n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
+    # records were emitted at the alpha superset level; exact-filter at delta
+    results = _build_results(
+        db_bool, labels, p2, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
+        filter_host=True,
+    )
     return {
         "lambda_final": p1.lam_final,
         "min_sup": min_sup,
         "correction_factor": k,
         "delta": delta,
         "n_significant": n_sig,
+        "results": results,
         "phase_outputs": (p1, p2),
     }
 
@@ -398,6 +465,11 @@ def lamp_distributed(
     The phase staging is pluggable: `pipeline` names an entry in PIPELINES
     ("three_phase" | "fused23").  `fuse_phase23=True` is the backward-
     compatible alias for pipeline="fused23".
+
+    Every pipeline returns the same keys, including "results": a
+    `repro.results.ResultSet` with the identified significant itemsets
+    (closures, exact Fisher P-values, Bonferroni q-values), top-k selection
+    and TSV/JSON export.
     """
     if pipeline is None:
         pipeline = "fused23" if fuse_phase23 else "three_phase"

@@ -2,10 +2,19 @@
 
 Pops up to `expand_batch` nodes from the local stack; one popcount-GEMM
 (`supports_gemm`) gives every extension's support; deferred-PPC validation,
-closed-set counting, significance sampling (mode="test"), 2-D histogram
-accumulation (mode="count2d"), child generation, and the resume-node path
-for parents whose children overflowed the per-superstep push cap
-(core/lcm.py documents the deferred-PPC scheme).
+closed-set counting, pattern-record emission (modes "test"/"count2d"),
+2-D histogram accumulation (mode="count2d"), child generation, and the
+resume-node path for parents whose children overflowed the per-superstep
+push cap (core/lcm.py documents the deferred-PPC scheme).
+
+Pattern emission (DESIGN.md §4): a significant node appends a fixed-size
+record — occurrence bitmap [W]u32 into `out_occ` plus (core, sup, pos_sup)
+i32 into `out_meta`, the same steal-friendly payload shape as stack nodes —
+for host-side closure reconstruction in repro.results.  mode="test" emits at
+the corrected level `delta`; mode="count2d" emits the alpha-level superset
+(delta is unknown until the 2-D histogram is reduced, and delta <= alpha
+always, so the host can filter down exactly).  Emissions past `out_cap` are
+dropped but *counted* in the emit_dropped stat so the host can warn.
 
 This phase is pure per-miner compute — no collectives — so it is the natural
 unit to retarget at an accelerator kernel: `supports_gemm` dispatches on
@@ -39,16 +48,18 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     """Returns the expand phase for one superstep.
 
     expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-           pos_mask, out_buf, out_ptr, delta)
-      -> (occ_stack, meta, sp, hist, hist2d, stats, out_buf, out_ptr, sig_cnt)
+           pos_mask, out_occ, out_meta, out_ptr, delta)
+      -> (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta,
+          out_ptr, sig_cnt)
     """
     B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
     NB = n + 2
     testing = mode == "test"
     hist2d_mode = mode == "count2d"
+    emitting = testing or hist2d_mode
 
     def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-               pos_mask, out_buf, out_ptr, delta):
+               pos_mask, out_occ, out_meta, out_ptr, delta):
         take = jnp.minimum(sp, B)
         rows = jnp.arange(B)
         node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
@@ -72,29 +83,28 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
         counted = accepted & (~is_resume)
 
         hist = hist.at[jnp.clip(sup, 0, NB - 1)].add(counted.astype(jnp.int32))
-        if hist2d_mode:
-            pos_sup2 = jnp.sum(
-                lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
-            ).astype(jnp.int32)
-            cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup2, 0, n_pos)
-            hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
 
         sig_cnt = jnp.int32(0)
-        if testing:
+        if emitting:
             pos_sup = jnp.sum(
                 lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
             ).astype(jnp.int32)
+            if hist2d_mode:
+                cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup, 0, n_pos)
+                hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
+            # emit pattern records at delta (mode="test": the corrected level;
+            # mode="count2d": alpha — a superset the host filters exactly)
             pvals = fisher_pvalue_jnp(sup, pos_sup, n, n_pos)
             sig = counted & (pvals <= delta)
             sig_cnt = jnp.sum(sig.astype(jnp.int32))
-            # append (sup, pos_sup) samples of significant sets
             sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]
+            src = jnp.clip(sig_idx, 0, B - 1)
             pos = jnp.where(sig_idx >= 0, out_ptr + jnp.arange(B), cfg.out_cap + 1)
-            vals = jnp.stack(
-                [sup[jnp.clip(sig_idx, 0, B - 1)], pos_sup[jnp.clip(sig_idx, 0, B - 1)]],
-                axis=1,
-            )
-            out_buf = out_buf.at[pos].set(vals, mode="drop")
+            out_occ = out_occ.at[pos].set(occ_nodes[src], mode="drop")
+            rec = jnp.stack([core[src], sup[src], pos_sup[src]], axis=1)
+            out_meta = out_meta.at[pos].set(rec, mode="drop")
+            # overflowing emissions are dropped by the scatter; count them
+            stats = stats.at[10].add(jnp.maximum(out_ptr + sig_cnt - cfg.out_cap, 0))
             out_ptr = jnp.minimum(out_ptr + sig_cnt, cfg.out_cap)
 
         # ---- children
@@ -149,7 +159,7 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
         stats = stats.at[2].add(jnp.sum(counted.astype(jnp.int32)))
         stats = stats.at[3].add(n_taken)
         stats = stats.at[8].add(overflow.astype(jnp.int32))
-        return (occ_stack, meta, sp3, hist, hist2d, stats, out_buf, out_ptr,
-                sig_cnt)
+        return (occ_stack, meta, sp3, hist, hist2d, stats, out_occ, out_meta,
+                out_ptr, sig_cnt)
 
     return expand

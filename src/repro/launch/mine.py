@@ -7,6 +7,8 @@ Set --devices N to fork with XLA_FLAGS=--xla_force_host_platform_device_count=N
 (one miner per device, as on a real pod slice); with --devices 0 the current
 jax device set is used.  --no-steal reproduces the paper's naive baseline.
 --ckpt-dir enables frontier checkpointing for restartable long searches.
+--top-k prints the most significant mined itemsets (the run's actual
+deliverable) and --patterns-out exports the full ResultSet as TSV/JSON.
 """
 
 from __future__ import annotations
@@ -32,6 +34,12 @@ def main(argv=None):
     ap.add_argument("--pipeline", default="three_phase",
                     help="LAMP pipeline (an engine.PIPELINES key, e.g. "
                          "three_phase | fused23)")
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="print the k most significant mined patterns")
+    ap.add_argument("--patterns-out", default="",
+                    help="write the full mined ResultSet (.tsv or .json)")
+    ap.add_argument("--out-cap", type=int, default=4096,
+                    help="per-miner pattern emission buffer capacity")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args(argv)
 
@@ -45,6 +53,7 @@ def main(argv=None):
     from repro.core.collectives import device_count
     from repro.core.engine import PIPELINES, EngineConfig, lamp_distributed
     from repro.data.synthetic import paper_problem
+    from repro.results import score_planted
 
     if args.pipeline not in PIPELINES:
         ap.error(f"--pipeline: unknown {args.pipeline!r}; "
@@ -61,6 +70,7 @@ def main(argv=None):
         steal_max=args.steal_max,
         steal_enabled=not args.no_steal,
         kernel_impl=args.kernel,
+        out_cap=args.out_cap,
         # size per-miner stacks by the devices actually available (forcing
         # --devices can fail if jax initialized first; see warning above)
         stack_cap=max(8192, 2 * spec.n_items // max(device_count(), 1) + 64),
@@ -71,6 +81,8 @@ def main(argv=None):
     dt = time.time() - t0
     phases = res["phase_outputs"]  # 3 for three_phase, 2 for fused23
     p2 = phases[1]
+    rs = res["results"]
+    score = score_planted(rs, planted)
     out = {
         "problem": spec.name,
         "pipeline": args.pipeline,
@@ -79,12 +91,21 @@ def main(argv=None):
         "closed_sets": res["correction_factor"],
         "delta": res["delta"],
         "significant": res["n_significant"],
+        "patterns": len(rs),
+        "patterns_complete": rs.complete,
+        "planted_recall": score["recall"],
         "wall_s": round(dt, 3),
         "supersteps": [p.supersteps for p in phases],
         "per_device_popped": p2.stats["popped"].tolist(),
         "steals": int(sum(p2.stats["steals_got"])),
     }
     print(json.dumps(out, indent=1))
+
+    print("\n" + rs.describe(args.top_k, planted=planted))
+
+    if args.patterns_out:
+        rs.save(args.patterns_out)
+        print(f"[out] wrote {len(rs)} patterns to {args.patterns_out}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(out, f)

@@ -1,0 +1,64 @@
+"""Host-side closure reconstruction from emitted pattern records (DESIGN.md §4).
+
+The engine emits fixed-size records — an occurrence bitmap `occ [W]u32` plus
+(core, sup, pos_sup) — not itemsets: itemset identity is *derived* state, and
+shipping variable-length item lists through the compiled superstep would break
+the dense fixed-payload collectives the whole engine is built on.  The closure
+is recovered on the host with the same popcount-GEMM used everywhere else:
+
+    item j  is in  clo(occ)   <=>   |occ & db_bits[j]| == |occ| == sup
+
+i.e. the closure is exactly the set of items whose column support under `occ`
+equals the pattern's support.  This is the standard closed-itemset identity
+(LCM's clo() operator) evaluated in bulk over all emitted records.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bitmap import supports_np
+
+__all__ = ["reconstruct_closures", "dedup_by_closure"]
+
+
+def reconstruct_closures(
+    occ: np.ndarray, sup: np.ndarray, db_bits: np.ndarray, chunk: int = 512,
+) -> list[tuple[int, ...]]:
+    """[K, W] occurrence bitmaps + [K] supports -> K closure itemsets.
+
+    Chunked over records so the [chunk, M] popcount-GEMM intermediate stays
+    small even for GWAS-scale M.
+    """
+    occ = np.asarray(occ, dtype=np.uint32)
+    sup = np.asarray(sup)
+    k = occ.shape[0]
+    out: list[tuple[int, ...]] = []
+    for lo in range(0, k, chunk):
+        hi = min(lo + chunk, k)
+        s = supports_np(occ[lo:hi], db_bits)  # [chunk, M]
+        in_clo = s == sup[lo:hi, None]
+        for r in range(hi - lo):
+            out.append(tuple(np.flatnonzero(in_clo[r]).tolist()))
+    return out
+
+
+def dedup_by_closure(closures, *fields):
+    """Keep the first record of every distinct closure.
+
+    closures: list of item tuples; fields: parallel arrays/lists to subset.
+    Returns (closures, *fields) with duplicates removed, order preserved.
+    Closure-duplicate records are expected only across pipeline stages (e.g.
+    the root added host-side) — within one traversal each closed set is
+    enumerated exactly once — but dedup here makes the result set robust to
+    any future emission source.
+    """
+    seen: set[tuple[int, ...]] = set()
+    keep: list[int] = []
+    for i, c in enumerate(closures):
+        if c not in seen:
+            seen.add(c)
+            keep.append(i)
+    kept_closures = [closures[i] for i in keep]
+    kept_fields = tuple(np.asarray(f)[keep] for f in fields)
+    return (kept_closures, *kept_fields)

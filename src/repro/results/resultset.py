@@ -1,0 +1,204 @@
+"""ResultSet — the materialized output of a significant-pattern mining run.
+
+The engine's histograms answer "how many patterns are significant"; this
+module answers "*which* patterns" (the paper's actual §5.6 deliverable).
+`build_result_set` turns the emitted device records into a `ResultSet`:
+
+  gather (done in engine.mine) -> closure reconstruction (reconstruct.py)
+  -> dedup by closure -> exact float64 Fisher P-values + Bonferroni q-values
+  -> sort by P-value.
+
+Two filtering regimes (DESIGN.md §4):
+
+  * mode="test" records were already filtered at delta on device — pass
+    ``filter_host=False`` and every record is kept (the device decision *is*
+    the result, so counts stay consistent with MineOutput.sig_count).
+  * mode="count2d" records are the alpha-level superset — pass
+    ``filter_host=True`` and the host keeps exactly those with exact
+    P <= delta, reproducing the fused pipeline's histogram-derived count.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.fisher import fisher_pvalue
+
+from .reconstruct import dedup_by_closure, reconstruct_closures
+
+__all__ = ["Pattern", "ResultSet", "build_result_set"]
+
+TSV_COLUMNS = ("rank", "items", "size", "support", "pos_support", "pvalue", "qvalue")
+
+
+@dataclass(frozen=True)
+class Pattern:
+    """One significant closed itemset with its exact test statistics."""
+
+    items: tuple[int, ...]      # the closure, sorted item ids
+    support: int                # x(I): transactions containing the itemset
+    pos_support: int            # n(I): positive transactions containing it
+    pvalue: float               # exact one-sided Fisher P (float64, host)
+    qvalue: float               # Bonferroni-adjusted: min(1, P * k)
+
+    def as_dict(self) -> dict:
+        return {
+            "items": list(self.items),
+            "support": int(self.support),
+            "pos_support": int(self.pos_support),
+            "pvalue": float(self.pvalue),
+            "qvalue": float(self.qvalue),
+        }
+
+
+@dataclass
+class ResultSet:
+    """Significant patterns plus the run's testing context, export-ready."""
+
+    patterns: list[Pattern] = field(default_factory=list)  # sorted by pvalue
+    n_transactions: int = 0
+    n_pos: int = 0
+    alpha: float = 0.05
+    min_sup: int = 1
+    correction_factor: int = 1   # k: number of testable (closed) patterns
+    delta: float = 0.05          # alpha / k, the corrected level
+    n_dropped: int = 0           # device emissions lost to out_cap saturation
+
+    @property
+    def complete(self) -> bool:
+        """False when out_cap overflowed: the pattern list is a subset."""
+        return self.n_dropped == 0
+
+    def __len__(self) -> int:
+        return len(self.patterns)
+
+    def __iter__(self):
+        return iter(self.patterns)
+
+    def top(self, k: int | None = None) -> list[Pattern]:
+        """The k most significant patterns (all when k is None)."""
+        return self.patterns[:k] if k is not None else list(self.patterns)
+
+    def describe(self, top_k: int | None = 10, planted=None) -> str:
+        """Human-readable top-k summary — the one formatter the CLI and
+        examples share, so pattern-line wording never drifts between them."""
+        shown = min(top_k, len(self)) if top_k is not None else len(self)
+        lines = [
+            f"top {shown} of {len(self)} significant patterns"
+            + ("" if self.complete else f"  [INCOMPLETE: {self.n_dropped} dropped]")
+        ]
+        for rank, p in enumerate(self.top(top_k), start=1):
+            lines.append(
+                f" {rank:3d}  items={list(p.items)}  sup={p.support} "
+                f"pos={p.pos_support}  p={p.pvalue:.3e}  q={p.qvalue:.3e}"
+            )
+        if planted is not None:
+            from .scoring import score_planted
+
+            s = score_planted(self, planted)
+            lines.append(
+                f"planted-signal recovery: {len(s['recovered'])}/{s['n_planted']} "
+                f"(recall {s['recall']:.2f}, precision {s['precision']:.2f})"
+            )
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------- export
+    def to_tsv(self, path: str | None = None, top_k: int | None = None) -> str:
+        lines = ["\t".join(TSV_COLUMNS)]
+        for rank, p in enumerate(self.top(top_k), start=1):
+            lines.append(
+                f"{rank}\t{','.join(map(str, p.items))}\t{len(p.items)}\t"
+                f"{p.support}\t{p.pos_support}\t{p.pvalue:.6e}\t{p.qvalue:.6e}"
+            )
+        text = "\n".join(lines) + "\n"
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def to_json(self, path: str | None = None, top_k: int | None = None) -> str:
+        payload = {
+            "n_transactions": self.n_transactions,
+            "n_pos": self.n_pos,
+            "alpha": self.alpha,
+            "min_sup": self.min_sup,
+            "correction_factor": self.correction_factor,
+            "delta": self.delta,
+            "n_patterns": len(self.patterns),
+            "complete": self.complete,
+            "n_dropped": self.n_dropped,
+            "patterns": [p.as_dict() for p in self.top(top_k)],
+        }
+        text = json.dumps(payload, indent=1)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def save(self, path: str, top_k: int | None = None) -> None:
+        """Write TSV or JSON by file extension (.tsv/.txt vs .json)."""
+        if path.endswith(".json"):
+            self.to_json(path, top_k)
+        else:
+            self.to_tsv(path, top_k)
+
+
+def build_result_set(
+    occ: np.ndarray,
+    sup: np.ndarray,
+    pos_sup: np.ndarray,
+    db_bits: np.ndarray,
+    *,
+    n: int,
+    n_pos: int,
+    alpha: float,
+    min_sup: int,
+    correction_factor: int,
+    delta: float,
+    filter_host: bool = False,
+    dropped: int = 0,
+) -> ResultSet:
+    """Emitted records -> deduped, exactly-tested, sorted ResultSet."""
+    occ = np.asarray(occ, dtype=np.uint32).reshape(-1, db_bits.shape[1])
+    sup = np.asarray(sup, dtype=np.int64).reshape(-1)
+    pos_sup = np.asarray(pos_sup, dtype=np.int64).reshape(-1)
+
+    closures = reconstruct_closures(occ, sup, db_bits)
+    closures, sup, pos_sup = dedup_by_closure(closures, sup, pos_sup)
+
+    k = max(int(correction_factor), 1)
+    patterns: list[Pattern] = []
+    if len(closures):
+        pvals = fisher_pvalue(sup, pos_sup, n, n_pos)
+        keep = pvals <= delta if filter_host else np.ones(len(closures), bool)
+        for i in np.flatnonzero(keep):
+            p = float(pvals[i])
+            patterns.append(Pattern(
+                items=closures[i],
+                support=int(sup[i]),
+                pos_support=int(pos_sup[i]),
+                pvalue=p,
+                qvalue=min(1.0, p * k),
+            ))
+
+    # The root closed set (closure of the empty itemset) never rides the
+    # device buffers — but it also never belongs here: its one-sided Fisher
+    # P-value is exactly 1 (support n covers all n_pos positives by the
+    # margins, leaving the single hypergeometric table), and delta = alpha/k
+    # < 1 always, so the root cannot be significant and the pattern list
+    # stays consistent with engine.mine()'s host-side root count.
+
+    patterns.sort(key=lambda p: (p.pvalue, -p.support, p.items))
+    return ResultSet(
+        patterns=patterns,
+        n_transactions=n,
+        n_pos=n_pos,
+        alpha=alpha,
+        min_sup=min_sup,
+        correction_factor=int(correction_factor),
+        delta=delta,
+        n_dropped=int(dropped),
+    )

@@ -44,14 +44,17 @@ def main():
         stack_cap=spec.get("stack_cap", 4096),
         steal_max=spec.get("steal_max", 64),
         push_cap=spec.get("push_cap", 256),
+        out_cap=spec.get("out_cap", 1024),
         steal_enabled=spec.get("steal_enabled", True),
         seed=spec.get("engine_seed", 0),
         kernel_impl=spec.get("kernel_impl", "ref"),
     )
     out = {}
     if spec["mode"] == "lamp_full":
-        res = lamp_distributed(db, labels, alpha=spec.get("alpha", 0.05), cfg=cfg)
-        p1, p2, p3 = res["phase_outputs"]
+        res = lamp_distributed(db, labels, alpha=spec.get("alpha", 0.05), cfg=cfg,
+                               pipeline=spec.get("pipeline", "three_phase"))
+        p1, p2 = res["phase_outputs"][:2]
+        rs = res["results"]
         out = {
             "lambda_final": res["lambda_final"],
             "min_sup": res["min_sup"],
@@ -62,6 +65,11 @@ def main():
             "steals_got": p1.stats["steals_got"].tolist(),
             "closed_per_dev": p2.stats["closed"].tolist(),
             "popped_per_dev": p2.stats["popped"].tolist(),
+            "patterns": [
+                [list(p.items), p.support, p.pos_support, p.pvalue, p.qvalue]
+                for p in rs
+            ],
+            "patterns_complete": rs.complete,
         }
     elif spec["mode"] == "count":
         res = mine(db, labels, mode="count", min_sup=spec["min_sup"], cfg=cfg)

@@ -1,0 +1,97 @@
+"""Lifeline steal-schedule invariants (core/lifeline.py), property-style.
+
+Every round of the schedule is consumed by a paired `ppermute` exchange
+(core/steal.py), which silently mis-routes work if a round is not a valid
+pairing or the reply permutation is not the inverse of the request one — so
+these invariants are load-bearing for correctness, not style.  Checked over
+P in {1, 2, 3, 5, 8, 13}: powers of two AND the "hypercube with holes" cases.
+"""
+
+import pytest
+
+from repro.core.lifeline import build_schedule
+
+PS = [1, 2, 3, 5, 8, 13]
+
+
+@pytest.fixture(params=PS, ids=[f"P{p}" for p in PS])
+def schedule(request):
+    return request.param, build_schedule(request.param, n_random=4, seed=0)
+
+
+def test_request_maps_are_valid_pairings(schedule):
+    p, sch = schedule
+    for (req, _rep), name in zip(sch.rounds, sch.names):
+        srcs = [s for s, _ in req]
+        dsts = [d for _, d in req]
+        assert all(0 <= s < p for s in srcs), name
+        assert all(0 <= d < p for d in dsts), name
+        # each endpoint appears at most once on each side, and the round is
+        # a permutation of the participating subset
+        assert len(set(srcs)) == len(srcs), name
+        assert len(set(dsts)) == len(dsts), name
+        assert set(srcs) == set(dsts), name
+
+
+def test_reply_pairs_invert_request_pairs(schedule):
+    _p, sch = schedule
+    for (req, rep), name in zip(sch.rounds, sch.names):
+        assert set(rep) == {(d, s) for s, d in req}, name
+
+
+def test_random_rounds_have_no_self_steals(schedule):
+    p, sch = schedule
+    rand_rounds = [(r, n) for r, n in zip(sch.rounds, sch.names)
+                   if n.startswith("rand")]
+    assert rand_rounds, "schedule must contain random steal rounds"
+    if p == 1:
+        return  # a lone miner can only pair with itself
+    for (req, _rep), name in rand_rounds:
+        assert all(s != d for s, d in req), f"self-steal in {name}"
+        # full permutation: every miner sends a request every random round
+        assert len(req) == p, name
+
+
+def test_hypercube_rounds_cover_non_power_of_two(schedule):
+    p, sch = schedule
+    hc_rounds = [r for r, n in zip(sch.rounds, sch.names) if n.startswith("hc")]
+    assert len(hc_rounds) == sch.dim
+    edges = set()
+    for d, (req, rep) in enumerate(hc_rounds):
+        # exactly the paper's lifeline involution i <-> i XOR 2^d, restricted
+        # to endpoints that exist ("hypercube with holes")
+        want = {(i, i ^ (1 << d)) for i in range(p) if (i ^ (1 << d)) < p}
+        assert set(req) == want, f"hc{d}"
+        assert req == rep, f"hc{d} must be an involution"
+        edges |= {frozenset(e) for e in req}
+    if p == 1:
+        assert not edges
+        return
+    # the union of lifeline edges must connect all P miners, or some miner
+    # could starve with work available elsewhere
+    reach = {0}
+    frontier = [0]
+    adj = {i: set() for i in range(p)}
+    for e in edges:
+        a, b = tuple(e)
+        adj[a].add(b)
+        adj[b].add(a)
+    while frontier:
+        nxt = adj[frontier.pop()] - reach
+        reach |= nxt
+        frontier.extend(nxt)
+    assert reach == set(range(p)), f"lifeline graph disconnected for P={p}"
+
+
+def test_schedule_shape_and_round_mix(schedule):
+    p, sch = schedule
+    assert sch.n_proc == p
+    assert sch.n_rounds == len(sch.names) == len(sch.rounds)
+    n_rand = sum(n.startswith("rand") for n in sch.names)
+    n_hc = sum(n.startswith("hc") for n in sch.names)
+    assert n_hc == sch.dim
+    assert n_rand == max(4, sch.dim)  # n_random=4 requested above
+    # the cyclic schedule interleaves: every hc round is preceded by a rand
+    for i, name in enumerate(sch.names):
+        if name.startswith("hc"):
+            assert sch.names[i - 1].startswith("rand")
