@@ -1,10 +1,11 @@
 """End-to-end GWAS-style significant pattern mining at paper-problem scale
-(scaled to CPU), with fault-tolerant restart of the mining engine.
+(scaled to CPU), on the session API.
 
   PYTHONPATH=src python examples/gwas_mining.py [--devices 8]
 
-Demonstrates: the three LAMP phases on a Table-1-matched problem, the GLB vs
-naive comparison, and checkpoint/restart of a long search (kill-resume).
+Demonstrates: the three LAMP phases on a Table-1-matched problem via a
+compile-once `MinerSession`, the mined itemsets printed with SNP names,
+the GLB vs naive comparison, and a warm repeat query with zero recompiles.
 """
 
 import argparse
@@ -20,36 +21,46 @@ def main():
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
     )
 
-    import numpy as np
+    from repro.api import Dataset, MinerSession, RuntimeConfig
 
-    from repro.core.engine import EngineConfig, lamp_distributed, mine
-    from repro.data.synthetic import paper_problem
-
-    db, labels, planted, spec = paper_problem("hapmap_dom_10", 0.05, 1.0)
+    ds = Dataset.from_paper_problem("hapmap_dom_10", 0.05, 1.0)
+    spec = ds.spec
     print(f"problem: {spec.name} scaled to {spec.n_items} items x "
           f"{spec.n_transactions} transactions (density {spec.density:.3f})")
 
-    cfg = EngineConfig(expand_batch=16, trace_cap=8192)
+    session = MinerSession(runtime=RuntimeConfig(expand_batch=16, trace_cap=8192))
     t0 = time.time()
-    res = lamp_distributed(db, labels, alpha=0.05, cfg=cfg)
+    report = session.mine(ds)
     print(f"\nthree-phase LAMP in {time.time()-t0:.1f}s: "
-          f"lambda={res['lambda_final']} min_sup={res['min_sup']} "
-          f"k={res['correction_factor']} significant={res['n_significant']}")
+          f"lambda={report.lambda_final} min_sup={report.min_sup} "
+          f"k={report.correction_factor} significant={report.n_significant}")
 
-    rs = res["results"]
-    print("\n" + rs.describe(10, planted=planted))
+    print("\n" + report.results.describe(10, planted=ds.planted))
 
-    p2 = res["phase_outputs"][1]
+    p2 = report.phases[1]
     work = p2.stats["popped"]
     print(f"phase-2 work per miner: min={work.min()} mean={work.mean():.0f} "
           f"max={work.max()}  (imbalance {work.max()/max(work.mean(),1):.2f}x, "
-          f"steals={p2.stats['steals_got'].sum()})")
+          f"steals={p2.steals})")
 
-    naive = mine(db, labels, mode="count", min_sup=res["min_sup"],
-                 cfg=EngineConfig(expand_batch=16, steal_enabled=False))
-    nwork = naive.stats["popped"]
+    # paper §5.4: same search without stealing — a separate runtime config,
+    # hence separate compiled programs, in a session of its own
+    naive_session = MinerSession(
+        runtime=RuntimeConfig(expand_batch=16, steal_enabled=False)
+    )
+    naive = naive_session.run_phase(ds, "count", min_sup=report.min_sup)
+    nwork = naive.output.stats["popped"]
     print(f"naive split (no stealing): imbalance "
           f"{nwork.max()/max(nwork.mean(),1):.2f}x  — the paper's §5.4 gap")
+
+    # warm repeat: a fresh same-shape dataset reuses every compiled program
+    ds2 = Dataset.from_paper_problem("hapmap_dom_10", 0.05, 1.0, seed=1)
+    before = session.cache_info()
+    rep2 = session.mine(ds2)
+    assert session.cache_info().misses == before.misses
+    print(f"\nwarm repeat query ({ds2.name} reseeded): {rep2.wall_s:.2f}s vs "
+          f"cold {report.wall_s:.2f}s, zero new compiles")
+    print(session.cache_info())
 
 
 if __name__ == "__main__":

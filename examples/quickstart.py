@@ -1,12 +1,15 @@
 """Quickstart: significant pattern mining (LAMP) on a small synthetic GWAS
-matrix — sequential oracle vs the distributed BSP engine, in ~20 seconds.
+matrix — sequential oracle vs the session-based distributed BSP engine, in
+~20 seconds.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Shows the canonical API (repro.api): a `Dataset` packed once, a
+`MinerSession` whose compiled programs are cached, a typed `MineReport`,
+and a second (warm) query that reuses every compiled program.
 """
 
-import numpy as np
-
-from repro.core.engine import EngineConfig, lamp_distributed
+from repro.api import Dataset, MinerSession, RuntimeConfig
 from repro.core.lamp import lamp
 from repro.data.synthetic import SyntheticSpec, generate
 from repro.results import score_planted
@@ -30,28 +33,45 @@ def main():
         print(f"   items={sorted(s.items)} support={s.support} "
               f"pos={s.pos_support} p={s.pvalue:.3e}")
 
-    # --- distributed BSP engine (all local devices; same three phases)
-    res = lamp_distributed(db, labels, alpha=0.05,
-                           cfg=EngineConfig(expand_batch=16))
-    print(f"\n[engine]     lambda={res['lambda_final']} min_sup={res['min_sup']} "
-          f"closed@min_sup={res['correction_factor']} delta={res['delta']:.2e} "
-          f"significant={res['n_significant']}")
-    rs = res["results"]  # the mined patterns themselves, not just the count
+    # --- distributed BSP engine behind the session API (all local devices)
+    session = MinerSession(runtime=RuntimeConfig(expand_batch=16))
+    ds = Dataset.from_dense(
+        db, labels, name="demo",
+        item_names=[f"snp{j:05d}" for j in range(spec.n_items)],
+    )
+    report = session.mine(ds)   # cold: compiles one program per phase
+    print(f"\n[engine]     lambda={report.lambda_final} min_sup={report.min_sup} "
+          f"closed@min_sup={report.correction_factor} delta={report.delta:.2e} "
+          f"significant={report.n_significant}")
+    rs = report.results  # the mined patterns themselves, not just the count
     for p in rs.top(5):
-        print(f"   items={list(p.items)} support={p.support} "
+        print(f"   items={rs.names_of(p)} support={p.support} "
               f"pos={p.pos_support} p={p.pvalue:.3e} q={p.qvalue:.3e}")
     score = score_planted(rs, planted)
     print(f"planted itemsets recovered: {len(score['recovered'])}/"
           f"{score['n_planted']} (recall {score['recall']:.2f})")
 
-    assert res["min_sup"] == ref.min_sup
-    assert res["correction_factor"] == ref.correction_factor
-    assert res["n_significant"] == len(ref.significant)
+    assert report.min_sup == ref.min_sup
+    assert report.correction_factor == ref.correction_factor
+    assert report.n_significant == len(ref.significant)
     got = {(p.items, p.support, p.pos_support) for p in rs}
     want = {(tuple(sorted(s.items)), s.support, s.pos_support)
             for s in ref.significant if s.items}
     assert got == want, "engine pattern identities must match the oracle"
     print("\nengine patterns match the sequential oracle — OK")
+
+    # --- repeat query on a warm session: zero new compiles
+    db2, labels2, _ = generate(SyntheticSpec(
+        name="demo2", n_items=120, n_transactions=300, density=0.06, n_pos=100,
+        n_planted=2, planted_pos_rate=0.7, planted_neg_rate=0.03, seed=2,
+    ))
+    before = session.cache_info()
+    report2 = session.mine(Dataset.from_dense(db2, labels2, name="demo2"))
+    after = session.cache_info()
+    assert after.misses == before.misses, "warm query must not recompile"
+    print(f"warm repeat query: {report2.wall_s:.3f}s vs cold "
+          f"{report.wall_s:.3f}s — zero new compiles "
+          f"({after.hits} cache hits)\n{after}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,46 @@
+"""repro.api — the canonical public mining surface (DESIGN.md §5).
+
+    from repro.api import Dataset, MinerSession
+
+    session = MinerSession()                      # mesh + program cache
+    ds = Dataset.from_paper_problem("hapmap_dom_10", 0.02)   # packed once
+    report = session.mine(ds)                     # cold: compiles per phase
+    report = session.mine(ds)                     # warm: zero re-compiles
+    print(report.summary())
+    print(report.results.describe(10))
+    print(session.cache_info())
+
+`Dataset` packs the occurrence bitmap once and pads to a shape bucket;
+`MinerSession` caches compiled BSP programs by (mode, bucket, runtime
+config) so phases, repeat queries, and same-bucket datasets all share them;
+`MineReport`/`PhaseReport` are the typed answers.  The legacy
+`repro.core.engine.lamp_distributed` dict API remains as a deprecation shim
+over this package.
+"""
+
+from .config import AlgorithmConfig, RuntimeConfig
+from .dataset import (
+    DEFAULT_BUCKETS,
+    EXACT_BUCKETS,
+    BucketPolicy,
+    Dataset,
+    ShapeBucket,
+)
+from .report import MineReport, PhaseReport
+from .session import PIPELINES, CacheInfo, MinerSession, ProgramInfo
+
+__all__ = [
+    "AlgorithmConfig",
+    "BucketPolicy",
+    "CacheInfo",
+    "Dataset",
+    "DEFAULT_BUCKETS",
+    "EXACT_BUCKETS",
+    "MineReport",
+    "MinerSession",
+    "PhaseReport",
+    "PIPELINES",
+    "ProgramInfo",
+    "RuntimeConfig",
+    "ShapeBucket",
+]

@@ -1,0 +1,93 @@
+"""Session configuration, split along the algorithm/runtime seam.
+
+`AlgorithmConfig` is *what* to compute (statistical level, min-support
+policy, phase staging) — it never appears in a compiled-program cache key,
+because alpha/min_sup/delta all enter the BSP program as runtime arguments.
+`RuntimeConfig` is *how* to run it (batch sizes, caps, kernel, stealing) —
+it is hashable and, resolved against a shape bucket, forms the non-shape
+half of the cache key.
+
+`RuntimeConfig.resolve(bucket, n_devices)` is the library home of the
+per-dataset stack sizing heuristic that used to live in `launch/mine.py`
+(CLI-only — library callers got an unsized stack).  It sizes by items per
+miner and then clamps by per-miner stack *memory*, which scales with the
+word width W = ceil(transactions/32): the old items-only rule ignored W, so
+scaling transactions up (scale_trans) silently multiplied stack bytes.
+Resolution uses bucket dims, not exact dims, so same-bucket datasets
+resolve to the same EngineConfig and share compiled programs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields, replace
+
+from repro.core.engine import EngineConfig
+
+from .dataset import ShapeBucket
+
+__all__ = ["AlgorithmConfig", "RuntimeConfig"]
+
+
+@dataclass(frozen=True)
+class AlgorithmConfig:
+    """What to compute: significance level and phase staging."""
+
+    alpha: float = 0.05          # family-wise error rate target
+    pipeline: str = "three_phase"  # PIPELINES key: "three_phase" | "fused23"
+    min_sup_floor: int = 1       # lower bound on the lambda-derived min_sup
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """How to run it: caps, kernel, stealing.  Hashable — cache-key half."""
+
+    expand_batch: int = 16         # B: nodes popped per device per superstep
+    stack_cap: int | None = None   # CAP; None = auto-size via resolve()
+    steal_max: int = 256           # T: max nodes per GIVE
+    push_cap: int = 1024           # C: max child pushes per superstep
+    out_cap: int = 4096            # significant-sample buffer
+    max_steps: int = 100_000
+    n_random_perms: int = 4
+    seed: int = 0
+    steal_enabled: bool = True
+    kernel_impl: str = "ref"       # "ref" | "pallas" (TPU) | "pallas_interpret"
+    trace_cap: int = 0
+    stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
+
+    @classmethod
+    def from_engine_config(cls, cfg: EngineConfig) -> "RuntimeConfig":
+        """Adopt a legacy EngineConfig verbatim (stack_cap stays fixed)."""
+        return cls(**{f.name: getattr(cfg, f.name) for f in fields(EngineConfig)})
+
+    def with_options(self, **kw) -> "RuntimeConfig":
+        return replace(self, **kw)
+
+    def resolve(self, bucket: ShapeBucket, n_devices: int) -> EngineConfig:
+        """Concrete EngineConfig for one shape bucket.
+
+        stack_cap default: 2 nodes per depth-1 root dealt to this miner
+        (the launcher's old items-based rule), floored at 8192, then clamped
+        so the per-miner stack — stack_cap * (W + 4) * 4 bytes, W the packed
+        word width — stays under `stack_mem_mb`.  The clamp never goes below
+        what one superstep can produce (push_cap + steal_max + expand_batch).
+        """
+        cap = self.stack_cap
+        if cap is None:
+            cap = max(8192, 2 * bucket.items // max(n_devices, 1) + 64)
+            node_bytes = 4 * (bucket.words + 4)  # occ [W]u32 + meta [4]i32
+            mem_cap = (self.stack_mem_mb * 2**20) // node_bytes
+            floor = 2 * (self.push_cap + self.steal_max + self.expand_batch)
+            cap = max(min(cap, mem_cap), floor)
+        return EngineConfig(
+            expand_batch=self.expand_batch,
+            stack_cap=int(cap),
+            steal_max=self.steal_max,
+            push_cap=self.push_cap,
+            out_cap=self.out_cap,
+            max_steps=self.max_steps,
+            n_random_perms=self.n_random_perms,
+            seed=self.seed,
+            steal_enabled=self.steal_enabled,
+            kernel_impl=self.kernel_impl,
+            trace_cap=self.trace_cap,
+        )

@@ -1,0 +1,258 @@
+"""Dataset — an immutable prepared mining input (DESIGN.md §5).
+
+A `Dataset` is the unit a `MinerSession` queries: the occurrence bitmap is
+packed exactly **once** at construction (`core.engine.pack_problem`), padded
+up to a *shape bucket*, and reused by every phase of every query.  The
+bucket — (transactions, positives, items) each rounded up to a configured
+grid — is the shape part of the session's compiled-program cache key:
+padding is all zero bits, zero-support items can never be accepted, counted,
+emitted, or generate children, so results are invariant to it, and any two
+datasets that land in the same bucket replay the same compiled programs
+with zero re-traces.
+
+Constructors: `from_dense` (bool matrix), `from_transactions` (lists of
+items, int ids or string tokens), `from_tsv` (label + item tokens per line),
+`from_paper_problem` (the Table-1 synthetic generator, with planted signal
+carried along for scoring).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.engine import PackedProblem, pack_problem
+
+__all__ = [
+    "BucketPolicy",
+    "DEFAULT_BUCKETS",
+    "EXACT_BUCKETS",
+    "ShapeBucket",
+    "Dataset",
+]
+
+
+@dataclass(frozen=True)
+class ShapeBucket:
+    """Program dims a dataset is padded to — the shape half of a cache key."""
+
+    transactions: int  # n_pad
+    positives: int     # npos_pad
+    items: int         # m_pad
+
+    @property
+    def words(self) -> int:
+        from repro.core.bitmap import num_words
+
+        return num_words(self.transactions)
+
+
+@dataclass(frozen=True)
+class BucketPolicy:
+    """How dataset dims round up to shared program shapes.
+
+    Geometric buckets (default ×2 from per-dim floors) bound padding waste at
+    `growth`× while collapsing the infinite space of dataset shapes onto a
+    few dozen buckets.  `exact=True` disables padding entirely (every
+    dataset gets its own program shapes — the legacy `lamp_distributed`
+    behavior, and the right choice for a single huge one-off matrix).
+    """
+
+    min_transactions: int = 64
+    min_positives: int = 16
+    min_items: int = 64
+    growth: float = 2.0
+    exact: bool = False
+
+    def _round(self, value: int, floor: int) -> int:
+        if value <= floor:
+            return floor
+        steps = math.ceil(math.log(value / floor) / math.log(self.growth))
+        return math.ceil(floor * self.growth ** steps)
+
+    def bucket_for(self, n: int, n_pos: int, m: int) -> ShapeBucket:
+        if self.exact:
+            return ShapeBucket(transactions=n, positives=n_pos, items=m)
+        return ShapeBucket(
+            transactions=self._round(n, self.min_transactions),
+            positives=self._round(n_pos, self.min_positives),
+            items=self._round(m, self.min_items),
+        )
+
+
+DEFAULT_BUCKETS = BucketPolicy()
+EXACT_BUCKETS = BucketPolicy(exact=True)
+
+
+class Dataset:
+    """Immutable prepared input: packed bitmaps + labels + names + bucket."""
+
+    def __init__(
+        self,
+        db_bool: np.ndarray,
+        labels: np.ndarray | None = None,
+        *,
+        item_names: "tuple[str, ...] | list[str] | None" = None,
+        name: str = "dataset",
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+        planted: "list[list[int]] | None" = None,
+    ):
+        db_bool = np.asarray(db_bool, dtype=bool)
+        if db_bool.ndim != 2:
+            raise ValueError(f"db_bool must be [transactions, items], got {db_bool.shape}")
+        n, m = db_bool.shape
+        if labels is not None:
+            labels = np.asarray(labels, dtype=bool)
+            if labels.shape != (n,):
+                raise ValueError(f"labels must be [{n}], got {labels.shape}")
+            labels = labels.copy()
+            labels.flags.writeable = False
+        if item_names is not None:
+            item_names = tuple(str(s) for s in item_names)
+            if len(item_names) != m:
+                raise ValueError(
+                    f"item_names has {len(item_names)} entries for {m} items"
+                )
+        n_pos = int(labels.sum()) if labels is not None else max(1, n // 2)
+        bucket = bucket_policy.bucket_for(n, n_pos, m)
+        self.name = str(name)
+        self.labels = labels
+        self.item_names = item_names
+        self.planted = planted
+        self.bucket = bucket
+        # the one and only pack of this database (threaded through every
+        # phase and through results reconstruction)
+        self.packed: PackedProblem = pack_problem(
+            db_bool,
+            labels,
+            n_pad=bucket.transactions,
+            npos_pad=bucket.positives,
+            m_pad=bucket.items,
+        )
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_transactions(self) -> int:
+        return self.packed.n
+
+    @property
+    def n_items(self) -> int:
+        return self.packed.m
+
+    @property
+    def n_pos(self) -> int:
+        return self.packed.n_pos
+
+    @property
+    def db_bits(self) -> np.ndarray:
+        """[m_pad, w_pad] u32 packed occurrence bitmap (read-only)."""
+        return self.packed.db_bits
+
+    def __repr__(self) -> str:
+        return (
+            f"Dataset({self.name!r}, {self.n_items} items x "
+            f"{self.n_transactions} transactions, n_pos={self.n_pos}, "
+            f"bucket=({self.bucket.transactions}, {self.bucket.positives}, "
+            f"{self.bucket.items}))"
+        )
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def from_dense(
+        cls,
+        db_bool: np.ndarray,
+        labels: np.ndarray | None = None,
+        *,
+        item_names=None,
+        name: str = "dense",
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+        planted=None,
+    ) -> "Dataset":
+        """Prepare a dense [transactions, items] bool matrix."""
+        return cls(db_bool, labels, item_names=item_names, name=name,
+                   bucket_policy=bucket_policy, planted=planted)
+
+    @classmethod
+    def from_transactions(
+        cls,
+        transactions,
+        labels=None,
+        *,
+        n_items: int | None = None,
+        item_names=None,
+        name: str = "transactions",
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+    ) -> "Dataset":
+        """Prepare a list of transactions, each an iterable of items.
+
+        Items may be integer column ids, or arbitrary string tokens — tokens
+        are assigned columns in sorted order and become the item names.
+        """
+        txns = [list(t) for t in transactions]
+        has_str = any(isinstance(i, str) for t in txns for i in t)
+        if has_str:
+            vocab = sorted({str(i) for t in txns for i in t})
+            col = {tok: j for j, tok in enumerate(vocab)}
+            txns = [[col[str(i)] for i in t] for t in txns]
+            if item_names is None:
+                item_names = tuple(vocab)
+        m = n_items if n_items is not None else (
+            1 + max((i for t in txns for i in t), default=-1)
+        )
+        db = np.zeros((len(txns), max(m, 1)), dtype=bool)
+        for r, t in enumerate(txns):
+            db[r, t] = True
+        return cls(db, labels, item_names=item_names, name=name,
+                   bucket_policy=bucket_policy)
+
+    @classmethod
+    def from_tsv(
+        cls,
+        path: str,
+        *,
+        name: str | None = None,
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+    ) -> "Dataset":
+        """Load `<label><TAB>item<TAB>item...` lines (one transaction each).
+
+        The first field is the case/control label (1/0); the remaining
+        fields are item tokens (strings are fine — they become item names).
+        """
+        labels, txns = [], []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                fields = line.split("\t")
+                labels.append(bool(int(fields[0])))
+                txns.append(fields[1:])
+        return cls.from_transactions(
+            txns, np.asarray(labels, dtype=bool),
+            name=name or path, bucket_policy=bucket_policy,
+        )
+
+    @classmethod
+    def from_paper_problem(
+        cls,
+        problem: str,
+        scale_items: float = 1.0,
+        scale_trans: float = 1.0,
+        *,
+        seed: int | None = None,
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+    ) -> "Dataset":
+        """A (scaled) Table-1 synthetic problem, with planted signal and
+        SNP-style item names carried along."""
+        from repro.data.synthetic import paper_problem
+
+        db, labels, planted, spec = paper_problem(
+            problem, scale_items, scale_trans, seed=seed
+        )
+        names = tuple(f"snp{j:05d}" for j in range(spec.n_items))
+        ds = cls(db, labels, item_names=names, name=spec.name,
+                 bucket_policy=bucket_policy, planted=planted)
+        ds.spec = spec
+        return ds

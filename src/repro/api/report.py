@@ -1,0 +1,82 @@
+"""Typed mining reports — the session's answer objects (DESIGN.md §5).
+
+`PhaseReport` wraps one engine pass (which compiled program ran, whether it
+was a warm cache hit, wall/compile time, and the raw `MineOutput` for
+telemetry); `MineReport` is the full query answer that replaces the legacy
+untyped dict: the LAMP quantities, the `ResultSet` of mined patterns, and
+per-phase reports.  `to_legacy_dict()` reproduces the documented
+`lamp_distributed` dict exactly for the deprecation shim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.engine import MineOutput
+from repro.results import ResultSet
+
+__all__ = ["PhaseReport", "MineReport"]
+
+
+@dataclass(frozen=True)
+class PhaseReport:
+    """One engine pass: what ran, how long, and its raw output."""
+
+    mode: str                  # "lamp1" | "count" | "test" | "count2d"
+    wall_s: float              # end-to-end phase wall time (incl. compile)
+    compile_s: float           # program compile time (0.0 on a warm hit)
+    cache_hit: bool            # True = reused an already-compiled program
+    supersteps: int
+    lam_final: int
+    n_nodes: int               # total nodes popped across miners
+    steals: int                # total steal receptions across miners
+    emit_dropped: int          # pattern records lost to out_cap saturation
+    output: MineOutput = field(repr=False)  # full raw telemetry
+
+    @property
+    def stats(self):
+        """Per-device counter arrays (STAT_NAMES keyed)."""
+        return self.output.stats
+
+
+@dataclass(frozen=True)
+class MineReport:
+    """The answer to one significant-pattern query."""
+
+    dataset: str               # Dataset.name
+    pipeline: str              # "three_phase" | "fused23"
+    alpha: float
+    lambda_final: int
+    min_sup: int
+    correction_factor: int     # k: number of testable (closed) patterns
+    delta: float               # alpha / k, the corrected level
+    n_significant: int
+    results: ResultSet         # the mined patterns themselves
+    phases: tuple[PhaseReport, ...]
+    wall_s: float              # full query wall time
+
+    @property
+    def cold(self) -> bool:
+        """True when any phase had to compile (first query of its bucket)."""
+        return any(not p.cache_hit for p in self.phases)
+
+    def summary(self) -> str:
+        tag = "cold" if self.cold else "warm"
+        return (
+            f"{self.dataset}[{self.pipeline}] lambda={self.lambda_final} "
+            f"min_sup={self.min_sup} k={self.correction_factor} "
+            f"delta={self.delta:.3e} significant={self.n_significant} "
+            f"({self.wall_s:.3f}s {tag})"
+        )
+
+    def to_legacy_dict(self) -> dict:
+        """The documented `lamp_distributed` return dict, exactly."""
+        return {
+            "lambda_final": self.lambda_final,
+            "min_sup": self.min_sup,
+            "correction_factor": self.correction_factor,
+            "delta": self.delta,
+            "n_significant": self.n_significant,
+            "results": self.results,
+            "phase_outputs": tuple(p.output for p in self.phases),
+        }

@@ -37,17 +37,22 @@ dense payload shape as stack nodes — and repro.results reconstructs the
 closure itemsets host-side; overflowed emissions are counted (emit_dropped)
 and surfaced as a RuntimeWarning from mine().
 
-LAMP pipelines (`lamp_distributed(..., pipeline=...)`, registry PIPELINES):
-  three_phase   the paper's §3.3 staging: lamp1 -> count -> test
-  fused23       beyond-paper: lamp1 -> count2d; phases 2+3 fall out of the
-                2-D histogram, saving one full traversal
+The program dims are *shape buckets* (DESIGN.md §5): arrays are sized by
+padded (transactions, positives, items) while the dataset's actual counts
+arrive as runtime scalars, so one compiled program serves every same-bucket
+dataset.  This module provides the building blocks — `pack_problem` /
+`deal_roots` (host pre), `build_phase_program` / `make_phase_args`
+(compile + call), `postprocess_phase` (host post) — plus the one-shot
+`mine()`.  The LAMP stagings (three_phase | fused23) live in
+`repro.api.session.PIPELINES` as functions over a compile-once
+`MinerSession`; the legacy `lamp_distributed` dict entry survives here as
+a deprecation shim.
 """
 
 from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Callable
 
 import numpy as np
 
@@ -116,24 +121,102 @@ def _thresholds_int(n: int, n_pos: int, alpha: float) -> np.ndarray:
     return out
 
 
-def preprocess(db_bool: np.ndarray, n_proc: int, cfg: EngineConfig, min_sup: int = 1):
-    """Paper §4.5: expand the root on the host, deal depth-1 nodes round-robin.
+@dataclass(frozen=True)
+class PackedProblem:
+    """A transaction database packed once, padded to program (bucket) dims.
 
-    Returns (db_bits [M,W], init_occ [P,CAP,W], init_meta [P,CAP,4],
-             init_sp [P], root_support).
+    The core-level prepared input: `repro.api.Dataset` wraps one of these
+    (adding labels, item names, and the bucket policy), and `mine()` builds
+    an exact-fit instance per call.  Padded items/words/positives are zero
+    bits, so they have zero support and can never be accepted, counted,
+    emitted, or generate children — results are invariant to the padding
+    (DESIGN.md §5).
+    """
+
+    db_bits: np.ndarray    # [m_pad, w_pad] u32 packed item columns
+    db_bits_t: np.ndarray  # [w_pad, m_pad] u32 contiguous transpose
+    pos_mask: np.ndarray   # [w_pad] u32 positive-transaction bitmap
+    occ0: np.ndarray       # [w_pad] u32 root occurrence (all actual transactions)
+    n: int                 # actual transactions
+    n_pos: int             # actual positives
+    m: int                 # actual items
+    n_pad: int             # bucket transactions (program dim)
+    npos_pad: int          # bucket positives (program dim)
+    m_pad: int             # bucket items (program dim)
+    has_labels: bool = True
+
+    @property
+    def w_pad(self) -> int:
+        return self.db_bits.shape[1]
+
+
+def pack_problem(
+    db_bool: np.ndarray,
+    labels: np.ndarray | None = None,
+    *,
+    n_pad: int | None = None,
+    npos_pad: int | None = None,
+    m_pad: int | None = None,
+) -> PackedProblem:
+    """Pack the bool matrix exactly once, padding to the given program dims.
+
+    Defaults pad to the exact dataset shape (the legacy one-shot path);
+    `repro.api.Dataset` passes its shape-bucket dims so same-bucket datasets
+    produce identically-shaped arguments and share compiled programs.
     """
     db_bool = np.asarray(db_bool, dtype=bool)
     n, m = db_bool.shape
-    w = num_words(n)
-    db_bits = pack_db(db_bool)
-    occ0 = full_occ(n)
-    s = supports_np(occ0, db_bits)
-    in_clo = s == n
+    if labels is not None:
+        labels = np.asarray(labels, dtype=bool)
+        n_pos = int(labels.sum())
+    else:
+        n_pos = max(1, n // 2)
+    n_pad = n if n_pad is None else n_pad
+    npos_pad = n_pos if npos_pad is None else npos_pad
+    m_pad = m if m_pad is None else m_pad
+    if n_pad < n or npos_pad < n_pos or m_pad < m:
+        raise ValueError(
+            f"bucket dims ({n_pad}, {npos_pad}, {m_pad}) smaller than dataset "
+            f"({n}, {n_pos}, {m})"
+        )
+    w_pad = num_words(n_pad)
+
+    packed = pack_db(db_bool)  # [m, w]
+    db_bits = np.zeros((m_pad, w_pad), dtype=np.uint32)
+    db_bits[:m, : packed.shape[1]] = packed
+    pos_mask = np.zeros(w_pad, dtype=np.uint32)
+    if labels is not None:
+        pos_bits = pack_db(labels[:, None])[0]
+        pos_mask[: pos_bits.shape[0]] = pos_bits
+    occ0 = np.zeros(w_pad, dtype=np.uint32)
+    root = full_occ(n)
+    occ0[: root.shape[0]] = root
+    for arr in (db_bits, pos_mask, occ0):
+        arr.flags.writeable = False
+    return PackedProblem(
+        db_bits=db_bits,
+        db_bits_t=np.ascontiguousarray(db_bits.T),
+        pos_mask=pos_mask,
+        occ0=occ0,
+        n=n, n_pos=n_pos, m=m,
+        n_pad=n_pad, npos_pad=npos_pad, m_pad=m_pad,
+        has_labels=labels is not None,
+    )
+
+
+def deal_roots(packed: PackedProblem, n_proc: int, cfg: EngineConfig, min_sup: int = 1):
+    """Paper §4.5: expand the root on the host, deal depth-1 nodes round-robin.
+
+    Returns (init_occ [P,CAP,W], init_meta [P,CAP,4], init_sp [P]).
+    """
+    db_bits, occ0 = packed.db_bits, packed.occ0
+    s = supports_np(occ0, db_bits)            # padded items have s == 0
+    in_clo = s == packed.n
     cand = np.flatnonzero((~in_clo) & (s >= max(1, min_sup)))
     clo_cum = np.concatenate([[0], np.cumsum(in_clo)])  # clo_cum[e] = |clo ∩ [0,e)|
 
     cap = cfg.stack_cap
-    init_occ = np.zeros((n_proc, cap, w), dtype=np.uint32)
+    init_occ = np.zeros((n_proc, cap, packed.w_pad), dtype=np.uint32)
     init_meta = np.zeros((n_proc, cap, 4), dtype=np.int32)
     init_sp = np.zeros(n_proc, dtype=np.int32)
     for e in cand:
@@ -143,28 +226,33 @@ def preprocess(db_bool: np.ndarray, n_proc: int, cfg: EngineConfig, min_sup: int
         init_occ[p, sp] = occ0 & db_bits[e]
         init_meta[p, sp] = (e, clo_cum[e], s[e], 0)
         init_sp[p] = sp + 1
-    return db_bits, init_occ, init_meta, init_sp, n
+    return init_occ, init_meta, init_sp
 
 
 def build_mine_step(
     *, n: int, n_pos: int, m: int, cfg: EngineConfig,
     schedule: LifelineSchedule, mode: str, axis: str = MINERS_AXIS,
 ):
-    """Wire the superstep phases into the per-device BSP program body."""
+    """Wire the superstep phases into the per-device BSP program body.
+
+    `n`/`n_pos`/`m` are program (shape-bucket) dims; the dataset's actual
+    transaction/positive counts are runtime scalar arguments of the returned
+    program, so one compiled program serves every same-bucket dataset.
+    """
     NB = n + 2
     NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
     expand = build_expand(n=n, n_pos=n_pos, m=m, cfg=cfg, mode=mode)
     steal_round = build_steal_round(schedule, cfg, axis)
     global_sync = build_global_sync(nb=NB, mode=mode, axis=axis)
 
-    def body(carry, db_mw, db_wm, pos_mask, thr, delta):
+    def body(carry, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act):
         (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_occ, out_meta,
          out_ptr, n_sig, trace, _work) = carry
         popped_before = stats[0]
         (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta, out_ptr,
          sig_cnt) = expand(
             occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-            pos_mask, out_occ, out_meta, out_ptr, delta,
+            pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act,
         )
         if cfg.trace_cap:
             trace = trace.at[jnp.minimum(t, cfg.trace_cap - 1)].add(
@@ -184,7 +272,7 @@ def build_mine_step(
                 out_meta, out_ptr, n_sig, trace, work)
 
     def program(init_occ, init_meta, init_sp, db_mw, db_wm, pos_mask, thr,
-                lam0, delta):
+                lam0, delta, n_act, npos_act):
         # per-device views arrive with a leading length-1 shard axis
         occ_stack = init_occ[0]
         meta = init_meta[0]
@@ -210,7 +298,9 @@ def build_mine_step(
         carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_occ,
                  out_meta, out_ptr, n_sig, trace, work0)
         carry = lax.while_loop(
-            cond_fn, lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta), carry
+            cond_fn,
+            lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act),
+            carry,
         )
         (_, _, _, hist, hist2d, lam, t, stats, out_occ, out_meta, out_ptr,
          n_sig, trace, _) = carry
@@ -225,64 +315,87 @@ def build_mine_step(
     return program
 
 
-def mine(
-    db_bool: np.ndarray,
-    labels: np.ndarray | None = None,
+def build_phase_program(
+    packed_dims: tuple[int, int, int],
     *,
-    mode: str = "lamp1",
-    alpha: float = 0.05,
-    min_sup: int = 1,
-    delta: float = 0.0,
-    cfg: EngineConfig = EngineConfig(),
-    devices=None,
-) -> MineOutput:
-    """Run one engine pass over all (or the given) local devices."""
-    assert mode in ("lamp1", "count", "test", "count2d")
-    db_bool = np.asarray(db_bool, dtype=bool)
-    n, m = db_bool.shape
-    w = num_words(n)
-    if devices is None:
-        devices = jax.devices()
-    n_proc = len(devices)
-    mesh = collectives.make_miner_mesh(devices)
-    schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
+    cfg: EngineConfig,
+    schedule: LifelineSchedule,
+    mesh,
+    mode: str,
+):
+    """shard_map'd (unjitted) BSP program for one engine pass.
 
-    if labels is not None:
-        labels = np.asarray(labels, dtype=bool)
-        n_pos = int(labels.sum())
-        pos_mask_bits = pack_db(labels[:, None])[0]  # [W]
-    else:
-        n_pos = max(1, n // 2)
-        pos_mask_bits = np.zeros(w, dtype=np.uint32)
-
-    start_sup = min_sup if mode != "lamp1" else 1
-    db_bits, init_occ, init_meta, init_sp, root_sup = preprocess(
-        db_bool, n_proc, cfg, start_sup
-    )
-    thr = _thresholds_int(n, n_pos, alpha)
-
+    `packed_dims` = (n_pad, npos_pad, m_pad) — the program (bucket) dims.
+    The returned callable takes the argument tuple built by
+    `make_phase_args` and is what `repro.api.MinerSession` AOT-compiles and
+    caches; `mine()` wraps it in a fresh `jax.jit` per call.
+    """
+    n_pad, npos_pad, m_pad = packed_dims
     program = build_mine_step(
-        n=n, n_pos=n_pos, m=m, cfg=cfg, schedule=schedule, mode=mode
+        n=n_pad, n_pos=npos_pad, m=m_pad, cfg=cfg, schedule=schedule, mode=mode
     )
-    shardy = collectives.shard_map(
+    return collectives.shard_map(
         program,
         mesh=mesh,
         in_specs=(
             P(MINERS_AXIS), P(MINERS_AXIS), P(MINERS_AXIS),  # stacks
             P(), P(), P(), P(),  # db_mw, db_wm, pos_mask, thr
-            P(), P(),  # lam0, delta
+            P(), P(), P(), P(),  # lam0, delta, n_act, npos_act
         ),
         out_specs=(P(), P(), P(), P(MINERS_AXIS), P(MINERS_AXIS),
                    P(MINERS_AXIS), P(MINERS_AXIS), P(), P(MINERS_AXIS), P()),
     )
-    lam0 = np.int32(start_sup)
-    out = jax.jit(shardy)(
+
+
+def make_phase_args(
+    packed: PackedProblem,
+    *,
+    n_proc: int,
+    cfg: EngineConfig,
+    mode: str,
+    alpha: float,
+    min_sup: int,
+    delta: float,
+):
+    """Build the program argument tuple (and the postprocess context).
+
+    Every array's shape/dtype is a function of (bucket dims, cfg, n_proc)
+    only, so repeat queries on a warm compiled program always re-match its
+    input signature exactly.
+
+    Returns (args, ctx) with ctx = dict(thr, start_sup) for postprocess.
+    """
+    start_sup = min_sup if mode != "lamp1" else 1
+    init_occ, init_meta, init_sp = deal_roots(packed, n_proc, cfg, start_sup)
+    thr = _thresholds_int(packed.n, packed.n_pos, alpha)
+    thr_pad = np.full(packed.n_pad + 2, INT_MAX, dtype=np.int32)
+    thr_pad[: thr.shape[0]] = thr
+    args = (
         init_occ, init_meta, init_sp,
-        db_bits, np.ascontiguousarray(db_bits.T), pos_mask_bits, thr,
-        lam0, np.float32(delta),
+        packed.db_bits, packed.db_bits_t, packed.pos_mask, thr_pad,
+        np.int32(start_sup), np.float32(delta),
+        np.int32(packed.n), np.int32(packed.n_pos),
     )
+    return args, dict(thr=thr_pad, start_sup=start_sup)
+
+
+def postprocess_phase(
+    raw_out,
+    *,
+    packed: PackedProblem,
+    n_proc: int,
+    cfg: EngineConfig,
+    mode: str,
+    thr: np.ndarray,
+    start_sup: int,
+    delta: float,
+) -> MineOutput:
+    """Device output -> MineOutput: slice padding, fold in the root closed
+    set, gather emitted pattern records, surface overflow."""
+    n, n_pos = packed.n, packed.n_pos
+    root_sup = n  # support of the root closure == all transactions
     (g_hist, lam, t, stats, out_occ, out_meta, out_ptr, g_sig, trace,
-     g_hist2d) = jax.tree.map(np.asarray, out)
+     g_hist2d) = jax.tree.map(np.asarray, raw_out)
     # count the root closed set (clo of the empty itemset), support = N
     g_hist = g_hist.copy()
     if root_sup >= start_sup:
@@ -290,6 +403,9 @@ def mine(
         if mode == "lamp1":
             # replay the lambda recursion including the root contribution
             lam = int(recompute_lambda(g_hist, thr, int(lam), xp=np))
+    # bucket padding (hist bins past n+1 are structurally zero) is an
+    # implementation detail — slice back to the dataset's exact shape
+    g_hist = g_hist[: n + 2]
 
     stats_dict = {name: stats[:, i] for i, name in enumerate(STAT_NAMES)}
     if np.any(stats_dict["overflow"]):
@@ -306,7 +422,7 @@ def mine(
         occ_rows = [out_occ[p, : int(ptrs[p])] for p in range(n_proc)]
         meta_rows = [out_meta[p, : int(ptrs[p])] for p in range(n_proc)]
         sig_occ = (np.concatenate(occ_rows, axis=0) if occ_rows
-                   else np.zeros((0, w), np.uint32))
+                   else np.zeros((0, packed.w_pad), np.uint32))
         allmeta = (np.concatenate(meta_rows, axis=0) if meta_rows
                    else np.zeros((0, 3), np.int32))
         sig_core, sig_sup, sig_pos = allmeta[:, 0], allmeta[:, 1], allmeta[:, 2]
@@ -317,11 +433,11 @@ def mine(
                 "but the emitted pattern set is incomplete — raise "
                 "EngineConfig.out_cap",
                 RuntimeWarning,
-                stacklevel=2,
+                stacklevel=3,
             )
     if mode == "test":
         # root significance (host-side, same test as on device)
-        if root_sup >= start_sup and labels is not None:
+        if root_sup >= start_sup and packed.has_labels:
             from .fisher import fisher_pvalue
 
             p_root = fisher_pvalue(root_sup, n_pos, n, n_pos)[0]
@@ -330,7 +446,8 @@ def mine(
 
     hist2d = None
     if mode == "count2d":
-        hist2d = g_hist2d.reshape(n + 1, n_pos + 1).copy()
+        hist2d = g_hist2d.reshape(packed.n_pad + 1, packed.npos_pad + 1)
+        hist2d = hist2d[: n + 1, : n_pos + 1].copy()
         if root_sup >= start_sup:
             hist2d[root_sup if root_sup <= n else n, n_pos] += 1
     return MineOutput(
@@ -346,111 +463,55 @@ def mine(
         sig_occ=sig_occ,
         sig_core=sig_core,
         emit_dropped=emit_dropped,
-        db_bits=db_bits,
+        db_bits=packed.db_bits,
     )
 
 
-# --------------------------------------------------------------- pipelines
-def _build_results(db_bool, labels, phase_out, *, alpha, min_sup, k, delta,
-                   filter_host):
-    """Emitted records of one phase output -> ResultSet (repro.results)."""
-    from repro.results import build_result_set
+def mine(
+    db_bool: np.ndarray,
+    labels: np.ndarray | None = None,
+    *,
+    mode: str = "lamp1",
+    alpha: float = 0.05,
+    min_sup: int = 1,
+    delta: float = 0.0,
+    cfg: EngineConfig = EngineConfig(),
+    devices=None,
+    packed: PackedProblem | None = None,
+) -> MineOutput:
+    """Run one engine pass over all (or the given) local devices.
 
-    db_bool = np.asarray(db_bool, dtype=bool)
-    labels = np.asarray(labels, dtype=bool)
-    # the phase already packed the database; never re-pack at GWAS scale
-    db_bits = (phase_out.db_bits if phase_out.db_bits is not None
-               else pack_db(db_bool))
-    return build_result_set(
-        phase_out.sig_occ, phase_out.sig_sup, phase_out.sig_pos_sup, db_bits,
-        n=db_bool.shape[0], n_pos=int(labels.sum()), alpha=alpha,
-        min_sup=min_sup, correction_factor=k, delta=delta,
-        filter_host=filter_host, dropped=phase_out.emit_dropped,
-    )
-
-
-def _pipeline_three_phase(db_bool, labels, alpha, cfg, devices):
-    """The paper's §3.3 staging: lamp1 -> count -> test (three traversals)."""
-    p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
-    min_sup = max(p1.lam_final - 1, 1)
-
-    # phase 2: exact closed-set count at min_sup
-    p2 = mine(db_bool, labels, mode="count", min_sup=min_sup, cfg=cfg, devices=devices)
-    k = int(p2.hist[min_sup:].sum())
-    delta = alpha / max(k, 1)
-    # phase 3: significance testing at delta
-    p3 = mine(
-        db_bool, labels, mode="test", min_sup=min_sup, delta=delta,
-        cfg=cfg, devices=devices,
-    )
-    # the device already filtered at delta; reconstruct + exact stats only
-    results = _build_results(
-        db_bool, labels, p3, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
-        filter_host=False,
-    )
-    return {
-        "lambda_final": p1.lam_final,
-        "min_sup": min_sup,
-        "correction_factor": k,
-        "delta": delta,
-        "n_significant": p3.sig_count,
-        "results": results,
-        "phase_outputs": (p1, p2, p3),
-    }
-
-
-def _pipeline_fused23(db_bool, labels, alpha, cfg, devices):
-    """Beyond-paper (EXPERIMENTS.md §Perf): lamp1 -> count2d, two traversals.
-
-    One enumeration pass builds a 2-D (support x pos-support) histogram;
-    P-values depend only on that pair, so the correction factor AND the
-    significant count both fall out of the histogram — the third engine pass
-    disappears entirely.  The same pass emits alpha-level pattern records
-    (delta <= alpha always), which the host filters down to the exact final
-    delta, so pattern identities survive the fusion too (DESIGN.md §4).
+    The one-shot low-level entry: packs the database (unless a prepared
+    `packed` is given), compiles the phase program for this call, runs it,
+    and postprocesses.  For repeated queries use `repro.api.MinerSession`,
+    which caches compiled programs across phases, queries, and same-bucket
+    datasets.
     """
-    p1 = mine(db_bool, labels, mode="lamp1", alpha=alpha, cfg=cfg, devices=devices)
-    min_sup = max(p1.lam_final - 1, 1)
+    assert mode in ("lamp1", "count", "test", "count2d")
+    if packed is None:
+        packed = pack_problem(db_bool, labels)
+    if devices is None:
+        devices = jax.devices()
+    n_proc = len(devices)
+    mesh = collectives.make_miner_mesh(devices)
+    schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
 
-    n = db_bool.shape[0]
-    n_pos = int(np.asarray(labels, bool).sum())
-    p2 = mine(db_bool, labels, mode="count2d", min_sup=min_sup, delta=alpha,
-              cfg=cfg, devices=devices)
-    h2 = p2.hist2d
-    sups_grid = np.arange(n + 1)
-    mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
-    k = int(h2[mask].sum())
-    delta = alpha / max(k, 1)
-    xs, ns = np.nonzero(mask)
-    from .fisher import fisher_pvalue
-
-    pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
-    sig_mask = pv <= delta
-    n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
-    # records were emitted at the alpha superset level; exact-filter at delta
-    results = _build_results(
-        db_bool, labels, p2, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
-        filter_host=True,
+    args, ctx = make_phase_args(
+        packed, n_proc=n_proc, cfg=cfg, mode=mode, alpha=alpha,
+        min_sup=min_sup, delta=delta,
     )
-    return {
-        "lambda_final": p1.lam_final,
-        "min_sup": min_sup,
-        "correction_factor": k,
-        "delta": delta,
-        "n_significant": n_sig,
-        "results": results,
-        "phase_outputs": (p1, p2),
-    }
+    shardy = build_phase_program(
+        (packed.n_pad, packed.npos_pad, packed.m_pad),
+        cfg=cfg, schedule=schedule, mesh=mesh, mode=mode,
+    )
+    raw = jax.jit(shardy)(*args)
+    return postprocess_phase(
+        raw, packed=packed, n_proc=n_proc, cfg=cfg, mode=mode,
+        thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
+    )
 
 
-#: First-class LAMP pipeline registry — select with
-#: `lamp_distributed(..., pipeline=<name>)`; extend by registering here.
-PIPELINES: dict[str, Callable] = {
-    "three_phase": _pipeline_three_phase,
-    "fused23": _pipeline_fused23,
-}
-
-
+# ----------------------------------------------------- legacy public shim
 def lamp_distributed(
     db_bool: np.ndarray,
     labels: np.ndarray,
@@ -460,27 +521,61 @@ def lamp_distributed(
     fuse_phase23: bool = False,
     pipeline: str | None = None,
 ):
-    """Full distributed LAMP (paper §3.3 + §4). Returns a dict.
+    """Deprecated one-shot LAMP entry — use `repro.api` instead.
+
+    .. deprecated::
+        The canonical surface is session-based::
+
+            from repro.api import Dataset, MinerSession
+            report = MinerSession().mine(Dataset.from_dense(db, labels))
+
+        `MinerSession` compiles each phase program once and reuses it across
+        phases, repeat queries, and same-bucket datasets; this shim rebuilds
+        a fresh session per call (re-compiling every phase, exactly like the
+        historical behavior) and flattens the typed `MineReport` back into
+        the documented legacy dict: lambda_final, min_sup,
+        correction_factor, delta, n_significant, results, phase_outputs.
 
     The phase staging is pluggable: `pipeline` names an entry in PIPELINES
     ("three_phase" | "fused23").  `fuse_phase23=True` is the backward-
     compatible alias for pipeline="fused23".
-
-    Every pipeline returns the same keys, including "results": a
-    `repro.results.ResultSet` with the identified significant itemsets
-    (closures, exact Fisher P-values, Bonferroni q-values), top-k selection
-    and TSV/JSON export.
     """
+    warnings.warn(
+        "lamp_distributed() is deprecated: use repro.api.MinerSession.mine() "
+        "on a repro.api.Dataset (compile-once sessions, typed MineReport)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import (
+        EXACT_BUCKETS, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
+    )
+    from repro.api.session import PIPELINES as _pipelines
+
     if pipeline is None:
         pipeline = "fused23" if fuse_phase23 else "three_phase"
     elif fuse_phase23 and pipeline != "fused23":
         raise ValueError(
             f"fuse_phase23=True conflicts with pipeline={pipeline!r}"
         )
-    try:
-        run = PIPELINES[pipeline]
-    except KeyError:
+    if pipeline not in _pipelines:
         raise ValueError(
-            f"unknown pipeline {pipeline!r}; available: {sorted(PIPELINES)}"
-        ) from None
-    return run(db_bool, labels, alpha, cfg, devices)
+            f"unknown pipeline {pipeline!r}; available: {sorted(_pipelines)}"
+        )
+    # exact buckets: bit-for-bit the historical program shapes
+    ds = Dataset.from_dense(db_bool, labels, bucket_policy=EXACT_BUCKETS)
+    session = MinerSession(
+        devices=devices,
+        algorithm=AlgorithmConfig(alpha=alpha, pipeline=pipeline),
+        runtime=RuntimeConfig.from_engine_config(cfg),
+    )
+    return session.mine(ds).to_legacy_dict()
+
+
+def __getattr__(name: str):
+    # PIPELINES moved to repro.api.session (imported lazily: api -> core is
+    # the module-level direction; this back-compat alias must not cycle).
+    if name == "PIPELINES":
+        from repro.api.session import PIPELINES
+
+        return PIPELINES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -47,8 +47,15 @@ def supports_gemm(occ_nodes, db_mw, db_wm, impl: str):
 def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     """Returns the expand phase for one superstep.
 
+    `n`, `n_pos`, `m` are the *program* (shape-bucket) dims: every array is
+    sized by them, and datasets padded up to the same bucket share one
+    compiled program (repro.api).  The dataset's actual transaction/positive
+    counts arrive at run time as the traced scalars `n_act`/`npos_act`
+    (needed only by the exact Fisher test); padded items have zero support,
+    so they can never be accepted, counted, emitted, or become children.
+
     expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-           pos_mask, out_occ, out_meta, out_ptr, delta)
+           pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act)
       -> (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta,
           out_ptr, sig_cnt)
     """
@@ -59,7 +66,7 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     emitting = testing or hist2d_mode
 
     def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-               pos_mask, out_occ, out_meta, out_ptr, delta):
+               pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act):
         take = jnp.minimum(sp, B)
         rows = jnp.arange(B)
         node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
@@ -90,11 +97,13 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
                 lax.population_count(occ_nodes & pos_mask[None, :]), axis=1
             ).astype(jnp.int32)
             if hist2d_mode:
+                # bucket-dim strides: sup <= n_act <= n and pos_sup <= npos_act
+                # <= n_pos, so the (sup, pos_sup) -> cell map is dataset-invariant
                 cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup, 0, n_pos)
                 hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
             # emit pattern records at delta (mode="test": the corrected level;
             # mode="count2d": alpha — a superset the host filters exactly)
-            pvals = fisher_pvalue_jnp(sup, pos_sup, n, n_pos)
+            pvals = fisher_pvalue_jnp(sup, pos_sup, n_act, npos_act, k_max=n_pos)
             sig = counted & (pvals <= delta)
             sig_cnt = jnp.sum(sig.astype(jnp.int32))
             sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]

@@ -118,14 +118,20 @@ def _log_comb_jnp(n, k):
     return jnp.where(valid, out, -jnp.inf)
 
 
-def fisher_pvalue_jnp(x, n, N, N_pos):
+def fisher_pvalue_jnp(x, n, N, N_pos, k_max: int | None = None):
     """Batched one-sided Fisher exact P-value on device (float32 log-space).
 
-    x, n: int arrays [B].  The n_i summation axis is sized N_pos+1 statically.
+    x, n: int arrays [B].  The n_i summation axis must be statically sized:
+    by default it is N_pos+1 (requires a concrete N_pos); pass `k_max` — any
+    static upper bound on N_pos — to let N and N_pos be traced runtime
+    scalars, so one compiled program serves every dataset whose positives fit
+    the bound (the shape-bucket sharing in repro.api).  Terms past the true
+    N_pos are masked out via hi = min(x, N_pos), so the value is unchanged.
     """
     x = jnp.asarray(x, jnp.int32)
     n = jnp.asarray(n, jnp.int32)
-    ni = jnp.arange(int(N_pos) + 1, dtype=jnp.int32)[None, :]
+    ni_hi = int(N_pos) if k_max is None else int(k_max)
+    ni = jnp.arange(ni_hi + 1, dtype=jnp.int32)[None, :]
     hi = jnp.minimum(x, N_pos)[:, None]
     mask = (ni >= n[:, None]) & (ni <= hi)
     logp = (

@@ -3,19 +3,24 @@
   python -m repro.launch.mine --problem hapmap_dom_10 --scale-items 0.02 \
       --devices 8 --alpha 0.05
 
+One-shot front-end over the session API (`repro.api`): builds a `Dataset`
+(packed once, SNP-style item names) and a `MinerSession`, runs one query,
+and prints the typed `MineReport`.  For sustained query traffic against a
+warm session use `repro.launch.mine_serve`.
+
 Set --devices N to fork with XLA_FLAGS=--xla_force_host_platform_device_count=N
 (one miner per device, as on a real pod slice); with --devices 0 the current
 jax device set is used.  --no-steal reproduces the paper's naive baseline.
---ckpt-dir enables frontier checkpointing for restartable long searches.
 --top-k prints the most significant mined itemsets (the run's actual
 deliverable) and --patterns-out exports the full ResultSet as TSV/JSON.
+Per-miner stacks are auto-sized by `RuntimeConfig.resolve` (items per miner,
+clamped by word-width-aware stack memory); --stack-cap overrides.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -30,9 +35,11 @@ def main(argv=None):
     ap.add_argument("--no-steal", action="store_true")
     ap.add_argument("--expand-batch", type=int, default=16)
     ap.add_argument("--steal-max", type=int, default=128)
+    ap.add_argument("--stack-cap", type=int, default=0,
+                    help="per-miner stack capacity (0 = auto-size)")
     ap.add_argument("--kernel", default="ref", choices=["ref", "pallas", "pallas_interpret"])
     ap.add_argument("--pipeline", default="three_phase",
-                    help="LAMP pipeline (an engine.PIPELINES key, e.g. "
+                    help="LAMP pipeline (an api.PIPELINES key, e.g. "
                          "three_phase | fused23)")
     ap.add_argument("--top-k", type=int, default=10,
                     help="print the k most significant mined patterns")
@@ -50,58 +57,60 @@ def main(argv=None):
             print(f"[warn] jax already initialized; --devices {args.devices} "
                   "ignored (set XLA_FLAGS before launch)", file=sys.stderr)
 
-    from repro.core.collectives import device_count
-    from repro.core.engine import PIPELINES, EngineConfig, lamp_distributed
-    from repro.data.synthetic import paper_problem
+    from repro.api import (
+        PIPELINES, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
+    )
     from repro.results import score_planted
 
     if args.pipeline not in PIPELINES:
         ap.error(f"--pipeline: unknown {args.pipeline!r}; "
                  f"available: {sorted(PIPELINES)}")
 
-    db, labels, planted, spec = paper_problem(
+    ds = Dataset.from_paper_problem(
         args.problem, args.scale_items, args.scale_trans
     )
+    spec = ds.spec
     print(f"[data] {spec.name}: {spec.n_items} items x {spec.n_transactions} "
           f"transactions, density {spec.density:.3f}, N_pos {spec.n_pos}")
 
-    cfg = EngineConfig(
-        expand_batch=args.expand_batch,
-        steal_max=args.steal_max,
-        steal_enabled=not args.no_steal,
-        kernel_impl=args.kernel,
-        out_cap=args.out_cap,
-        # size per-miner stacks by the devices actually available (forcing
-        # --devices can fail if jax initialized first; see warning above)
-        stack_cap=max(8192, 2 * spec.n_items // max(device_count(), 1) + 64),
+    session = MinerSession(
+        algorithm=AlgorithmConfig(alpha=args.alpha, pipeline=args.pipeline),
+        runtime=RuntimeConfig(
+            expand_batch=args.expand_batch,
+            steal_max=args.steal_max,
+            steal_enabled=not args.no_steal,
+            kernel_impl=args.kernel,
+            out_cap=args.out_cap,
+            # stack_cap=None: sized by RuntimeConfig.resolve for the
+            # dataset's bucket and the devices actually available
+            stack_cap=args.stack_cap or None,
+        ),
     )
     t0 = time.time()
-    res = lamp_distributed(db, labels, alpha=args.alpha, cfg=cfg,
-                           pipeline=args.pipeline)
+    report = session.mine(ds)
     dt = time.time() - t0
-    phases = res["phase_outputs"]  # 3 for three_phase, 2 for fused23
-    p2 = phases[1]
-    rs = res["results"]
-    score = score_planted(rs, planted)
+    p2 = report.phases[1].output
+    rs = report.results
+    score = score_planted(rs, ds.planted)
     out = {
         "problem": spec.name,
         "pipeline": args.pipeline,
-        "lambda": res["lambda_final"],
-        "min_sup": res["min_sup"],
-        "closed_sets": res["correction_factor"],
-        "delta": res["delta"],
-        "significant": res["n_significant"],
+        "lambda": report.lambda_final,
+        "min_sup": report.min_sup,
+        "closed_sets": report.correction_factor,
+        "delta": report.delta,
+        "significant": report.n_significant,
         "patterns": len(rs),
         "patterns_complete": rs.complete,
         "planted_recall": score["recall"],
         "wall_s": round(dt, 3),
-        "supersteps": [p.supersteps for p in phases],
+        "supersteps": [p.supersteps for p in report.phases],
         "per_device_popped": p2.stats["popped"].tolist(),
         "steals": int(sum(p2.stats["steals_got"])),
     }
     print(json.dumps(out, indent=1))
 
-    print("\n" + rs.describe(args.top_k, planted=planted))
+    print("\n" + rs.describe(args.top_k, planted=ds.planted))
 
     if args.patterns_out:
         rs.save(args.patterns_out)

@@ -1,0 +1,173 @@
+"""Query-serving loop: N significant-pattern queries against one warm session.
+
+  python -m repro.launch.mine_serve --problem hapmap_dom_10 --scale-items 0.02 \
+      --devices 8 --queries 16
+
+The deployment mode the session API exists for (ROADMAP north star: heavy
+repeated query traffic): a `MinerSession` is built once; a queue of queries
+— fresh same-shape datasets (reseeded synthetic cohorts) × a cycle of
+significance levels — drains against it.  Query 0 is cold (compiles one
+program per phase); every later query replays warm compiled programs with
+zero re-traces.  Prints per-query latencies, a latency histogram, the
+cold/warm ratio, and the session's program-cache stats.
+
+  --smoke      CI-sized: tiny scales, 4 queries (used by the slow-system job)
+  --json-out   machine-readable latencies + cache stats
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import deque
+
+
+def percentile(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    i = min(int(round(q / 100 * (len(xs) - 1))), len(xs) - 1)
+    return xs[i]
+
+
+def latency_histogram(lat_s, width=40) -> str:
+    """Log2-bucket text histogram over milliseconds."""
+    if not lat_s:
+        return "(no samples)"
+    ms = [x * 1e3 for x in lat_s]
+    lo = min(ms)
+    edge = 1.0
+    while edge > lo:
+        edge /= 2
+    buckets: dict[float, int] = {}
+    for x in ms:
+        e = edge
+        while e * 2 <= x:
+            e *= 2
+        buckets[e] = buckets.get(e, 0) + 1
+    peak = max(buckets.values())
+    lines = []
+    for e in sorted(buckets):
+        n = buckets[e]
+        bar = "#" * max(1, round(width * n / peak))
+        lines.append(f"  [{e:9.1f}ms, {e * 2:9.1f}ms)  {n:4d}  {bar}")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="hapmap_dom_10")
+    ap.add_argument("--scale-items", type=float, default=0.02)
+    ap.add_argument("--scale-trans", type=float, default=1.0)
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--alphas", default="0.05,0.01",
+                    help="comma-separated significance levels cycled across queries")
+    ap.add_argument("--pipeline", default="three_phase")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--expand-batch", type=int, default=16)
+    ap.add_argument("--kernel", default="ref",
+                    choices=["ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--top-k", type=int, default=3,
+                    help="patterns shown per query (0 = summary line only)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny scales and 4 queries")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args(argv)
+    if args.queries < 1:
+        ap.error("--queries must be >= 1")
+    if args.smoke:
+        args.scale_items = min(args.scale_items, 0.01)
+        args.queries = min(args.queries, 4)
+
+    if args.devices:
+        from repro.core.collectives import force_host_device_count
+
+        if not force_host_device_count(args.devices):
+            print(f"[warn] jax already initialized; --devices {args.devices} "
+                  "ignored (set XLA_FLAGS before launch)", file=sys.stderr)
+
+    from repro.api import (
+        PIPELINES, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
+    )
+
+    if args.pipeline not in PIPELINES:
+        ap.error(f"--pipeline: unknown {args.pipeline!r}; "
+                 f"available: {sorted(PIPELINES)}")
+    alphas = [float(a) for a in args.alphas.split(",") if a]
+
+    session = MinerSession(
+        algorithm=AlgorithmConfig(pipeline=args.pipeline),
+        runtime=RuntimeConfig(expand_batch=args.expand_batch,
+                              kernel_impl=args.kernel),
+    )
+    print(f"[serve] session over {session.n_devices} miners, "
+          f"pipeline={args.pipeline}, alphas={alphas}")
+
+    # the query queue: reseeded same-shape cohorts (same bucket -> warm) at
+    # cycling significance levels
+    queue = deque(
+        (q, q, alphas[q % len(alphas)]) for q in range(args.queries)
+    )
+    lat, n_phases = [], 0
+    t_serve = time.time()
+    while queue:
+        q, seed, alpha = queue.popleft()
+        ds = Dataset.from_paper_problem(
+            args.problem, args.scale_items, args.scale_trans, seed=seed
+        )
+        t0 = time.perf_counter()
+        report = session.mine(ds, alpha=alpha)
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        n_phases = len(report.phases)
+        tag = "cold" if report.cold else "warm"
+        print(f"[q{q:03d}] {tag} {dt * 1e3:9.1f}ms  alpha={alpha:<5} "
+              f"min_sup={report.min_sup} k={report.correction_factor} "
+              f"significant={report.n_significant}")
+        if args.top_k:
+            for line in report.results.describe(args.top_k).splitlines()[1:]:
+                print("   " + line)
+    total = time.time() - t_serve
+
+    warm = lat[1:] if len(lat) > 1 else []
+    cold_s = lat[0]
+    summary = {
+        "problem": args.problem,
+        "pipeline": args.pipeline,
+        "devices": session.n_devices,
+        "queries": len(lat),
+        "total_wall_s": round(total, 3),
+        "cold_s": round(cold_s, 4),
+        "warm_mean_s": round(sum(warm) / len(warm), 4) if warm else None,
+        "warm_p50_s": round(percentile(warm, 50), 4) if warm else None,
+        "warm_p90_s": round(percentile(warm, 90), 4) if warm else None,
+        "warm_max_s": round(max(warm), 4) if warm else None,
+        "cold_over_warm": (round(cold_s * len(warm) / sum(warm), 1)
+                           if warm else None),
+        "qps_warm": round(len(warm) / sum(warm), 2) if warm else None,
+    }
+    print("\n[latency] " + json.dumps(summary))
+    print(latency_histogram(lat))
+    ci = session.cache_info()
+    print(ci)
+    # every query after the first must have been fully warm: exactly one
+    # compile per phase of the pipeline, ever
+    assert ci.misses == n_phases, \
+        f"expected {n_phases} compiles, saw {ci.misses}"
+
+    if args.json_out:
+        payload = dict(
+            summary,
+            per_query_s=[round(x, 4) for x in lat],
+            cache={"hits": ci.hits, "misses": ci.misses,
+                   "programs": ci.n_programs},
+        )
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[out] {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

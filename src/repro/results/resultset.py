@@ -66,11 +66,18 @@ class ResultSet:
     correction_factor: int = 1   # k: number of testable (closed) patterns
     delta: float = 0.05          # alpha / k, the corrected level
     n_dropped: int = 0           # device emissions lost to out_cap saturation
+    item_names: tuple[str, ...] | None = None  # column id -> display name
 
     @property
     def complete(self) -> bool:
         """False when out_cap overflowed: the pattern list is a subset."""
         return self.n_dropped == 0
+
+    def names_of(self, pattern: Pattern) -> list[str]:
+        """Display names of a pattern's items (falls back to the indices)."""
+        if self.item_names is None:
+            return [str(j) for j in pattern.items]
+        return [self.item_names[j] for j in pattern.items]
 
     def __len__(self) -> int:
         return len(self.patterns)
@@ -91,8 +98,9 @@ class ResultSet:
             + ("" if self.complete else f"  [INCOMPLETE: {self.n_dropped} dropped]")
         ]
         for rank, p in enumerate(self.top(top_k), start=1):
+            shown = "[" + ", ".join(self.names_of(p)) + "]"
             lines.append(
-                f" {rank:3d}  items={list(p.items)}  sup={p.support} "
+                f" {rank:3d}  items={shown}  sup={p.support} "
                 f"pos={p.pos_support}  p={p.pvalue:.3e}  q={p.qvalue:.3e}"
             )
         if planted is not None:
@@ -107,12 +115,18 @@ class ResultSet:
 
     # ------------------------------------------------------------- export
     def to_tsv(self, path: str | None = None, top_k: int | None = None) -> str:
-        lines = ["\t".join(TSV_COLUMNS)]
+        # the `items` column stays raw column indices (machine-readable);
+        # a trailing `names` column is appended when the dataset named them
+        cols = TSV_COLUMNS + (("names",) if self.item_names else ())
+        lines = ["\t".join(cols)]
         for rank, p in enumerate(self.top(top_k), start=1):
-            lines.append(
+            row = (
                 f"{rank}\t{','.join(map(str, p.items))}\t{len(p.items)}\t"
                 f"{p.support}\t{p.pos_support}\t{p.pvalue:.6e}\t{p.qvalue:.6e}"
             )
+            if self.item_names:
+                row += "\t" + ",".join(self.names_of(p))
+            lines.append(row)
         text = "\n".join(lines) + "\n"
         if path:
             with open(path, "w") as f:
@@ -120,6 +134,12 @@ class ResultSet:
         return text
 
     def to_json(self, path: str | None = None, top_k: int | None = None) -> str:
+        def pattern_dict(p: Pattern) -> dict:
+            d = p.as_dict()   # "items" stays indices — machine-readable
+            if self.item_names:
+                d["names"] = self.names_of(p)
+            return d
+
         payload = {
             "n_transactions": self.n_transactions,
             "n_pos": self.n_pos,
@@ -130,7 +150,7 @@ class ResultSet:
             "n_patterns": len(self.patterns),
             "complete": self.complete,
             "n_dropped": self.n_dropped,
-            "patterns": [p.as_dict() for p in self.top(top_k)],
+            "patterns": [pattern_dict(p) for p in self.top(top_k)],
         }
         text = json.dumps(payload, indent=1)
         if path:
@@ -160,6 +180,7 @@ def build_result_set(
     delta: float,
     filter_host: bool = False,
     dropped: int = 0,
+    item_names: tuple[str, ...] | None = None,
 ) -> ResultSet:
     """Emitted records -> deduped, exactly-tested, sorted ResultSet."""
     occ = np.asarray(occ, dtype=np.uint32).reshape(-1, db_bits.shape[1])
@@ -201,4 +222,5 @@ def build_result_set(
         correction_factor=int(correction_factor),
         delta=delta,
         n_dropped=int(dropped),
+        item_names=tuple(item_names) if item_names is not None else None,
     )

@@ -50,7 +50,50 @@ def main():
         kernel_impl=spec.get("kernel_impl", "ref"),
     )
     out = {}
-    if spec["mode"] == "lamp_full":
+    if spec["mode"] == "session":
+        # two queries (reseeded same-shape datasets) on one MinerSession:
+        # returns both pattern sets plus the program-cache counters so the
+        # parent can assert the second query compiled nothing
+        from repro.api import AlgorithmConfig, Dataset, MinerSession, RuntimeConfig
+
+        session = MinerSession(
+            algorithm=AlgorithmConfig(alpha=spec.get("alpha", 0.05),
+                                      pipeline=spec.get("pipeline", "three_phase")),
+            runtime=RuntimeConfig.from_engine_config(cfg).with_options(
+                stack_cap=None),
+        )
+        queries = []
+        misses = []
+        for seed in (spec.get("seed", 0), spec.get("seed2", 1)):
+            db_q, labels_q, _ = generate(
+                SyntheticSpec(
+                    name="sub", n_items=spec["n_items"],
+                    n_transactions=spec["n_transactions"],
+                    density=spec["density"], n_pos=spec["n_pos"],
+                    n_planted=spec.get("n_planted", 2), seed=seed,
+                )
+            )
+            rep = session.mine(Dataset.from_dense(db_q, labels_q, name=f"q{seed}"))
+            queries.append({
+                "min_sup": rep.min_sup,
+                "correction_factor": rep.correction_factor,
+                "delta": rep.delta,
+                "n_significant": rep.n_significant,
+                "cold": rep.cold,
+                "patterns": [
+                    [list(p.items), p.support, p.pos_support, p.pvalue, p.qvalue]
+                    for p in rep.results
+                ],
+            })
+            ci = session.cache_info()
+            misses.append(ci.misses)
+        out = {
+            "queries": queries,
+            "misses_per_query": misses,
+            "hits": ci.hits,
+            "n_programs": ci.n_programs,
+        }
+    elif spec["mode"] == "lamp_full":
         res = lamp_distributed(db, labels, alpha=spec.get("alpha", 0.05), cfg=cfg,
                                pipeline=spec.get("pipeline", "three_phase"))
         p1, p2 = res["phase_outputs"][:2]

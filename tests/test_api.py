@@ -1,0 +1,305 @@
+"""Session API: Dataset packing/bucketing, compile-once MinerSession,
+typed reports, and the legacy lamp_distributed shim.
+
+The acceptance bar (ISSUE 3): a repeated query on a warm session (same
+shape bucket) triggers **zero** recompiles — asserted via cache_info() —
+and returns bit-identical ResultSets (incl. exact P-values) to a fresh
+`lamp_distributed` run, on 1 in-process device and on 8 simulated devices
+(subprocess); the shim still returns the documented dict and warns.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (
+    EXACT_BUCKETS,
+    BucketPolicy,
+    Dataset,
+    MinerSession,
+    RuntimeConfig,
+    ShapeBucket,
+)
+from repro.core.engine import EngineConfig, MineOutput, lamp_distributed
+from repro.data.synthetic import SyntheticSpec, generate
+from repro.results import ResultSet
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+CFG = EngineConfig(expand_batch=8, stack_cap=2048, steal_max=32, push_cap=128)
+RUNTIME = RuntimeConfig.from_engine_config(CFG)
+
+
+def small_problem(seed=0, n=60, m=24, density=0.15, n_pos=20, planted=2):
+    spec = SyntheticSpec(
+        name="t", n_items=m, n_transactions=n, density=density, n_pos=n_pos,
+        n_planted=planted, seed=seed,
+    )
+    return generate(spec)
+
+
+def _keys(rs):
+    return [(p.items, p.support, p.pos_support, p.pvalue, p.qvalue) for p in rs]
+
+
+def _legacy(db, labels, **kw):
+    with pytest.warns(DeprecationWarning):
+        return lamp_distributed(db, labels, alpha=0.05, cfg=CFG, **kw)
+
+
+# ------------------------------------------------------------------ Dataset
+def test_bucket_policy_rounding():
+    pol = BucketPolicy()  # x2 growth from (64, 16, 64)
+    assert pol.bucket_for(60, 20, 24) == ShapeBucket(64, 32, 64)
+    assert pol.bucket_for(64, 16, 64) == ShapeBucket(64, 16, 64)
+    assert pol.bucket_for(65, 17, 65) == ShapeBucket(128, 32, 128)
+    assert pol.bucket_for(697, 105, 225) == ShapeBucket(1024, 128, 256)
+    assert pol.bucket_for(1, 1, 1) == ShapeBucket(64, 16, 64)
+    exact = EXACT_BUCKETS.bucket_for(697, 105, 225)
+    assert exact == ShapeBucket(697, 105, 225)
+
+
+def test_dataset_packs_once_padded_and_immutable():
+    db, labels, _ = small_problem()
+    ds = Dataset.from_dense(db, labels, name="d0")
+    b = ds.bucket
+    assert (ds.n_transactions, ds.n_pos, ds.n_items) == (60, 20, 24)
+    assert ds.db_bits.shape == (b.items, b.words)
+    assert ds.packed.occ0.shape == (b.words,)
+    assert not ds.db_bits.flags.writeable
+    assert not ds.labels.flags.writeable
+    # padded item columns are all-zero bits — they can never gain support
+    assert not ds.db_bits[ds.n_items:].any()
+    # exact policy pads nothing
+    ds_exact = Dataset.from_dense(db, labels, bucket_policy=EXACT_BUCKETS)
+    assert ds_exact.db_bits.shape == (24, 2)
+
+
+def test_dataset_from_transactions_and_tsv(tmp_path):
+    txns = [["rs17", "rs3"], ["rs3"], ["rs17", "rs3", "rs99"]]
+    labels = np.array([True, False, True])
+    ds = Dataset.from_transactions(txns, labels, name="toy")
+    assert ds.item_names == ("rs17", "rs3", "rs99")  # sorted vocabulary
+    assert ds.n_items == 3 and ds.n_transactions == 3 and ds.n_pos == 2
+    dense = np.array([[1, 1, 0], [0, 1, 0], [1, 1, 1]], dtype=bool)
+    np.testing.assert_array_equal(
+        ds.db_bits[:3], Dataset.from_dense(dense, labels).db_bits[:3]
+    )
+
+    path = tmp_path / "toy.tsv"
+    path.write_text("1\trs17\trs3\n0\trs3\n1\trs17\trs3\trs99\n")
+    ds2 = Dataset.from_tsv(str(path))
+    assert ds2.item_names == ds.item_names
+    np.testing.assert_array_equal(ds2.db_bits, ds.db_bits)
+    np.testing.assert_array_equal(ds2.labels, labels)
+
+
+# ------------------------------------------------------- RuntimeConfig.resolve
+def test_runtime_resolve_moves_launcher_heuristic_into_library():
+    rt = RuntimeConfig()
+    cfg = rt.resolve(ShapeBucket(1024, 128, 256), n_devices=8)
+    # small problems keep the old items-based floor
+    assert cfg.stack_cap == 8192
+    # the heuristic grows with items per miner exactly as the CLI rule did
+    cfg_big = rt.resolve(ShapeBucket(1024, 128, 262144), n_devices=8)
+    assert cfg_big.stack_cap == 2 * 262144 // 8 + 64
+
+
+def test_runtime_resolve_accounts_for_word_width():
+    rt = RuntimeConfig(stack_mem_mb=4)
+    wide = rt.resolve(ShapeBucket(1 << 20, 128, 65536), n_devices=1)   # W=32768
+    thin = rt.resolve(ShapeBucket(64, 16, 65536), n_devices=1)         # W=2
+    # same items: the transaction-heavy bucket must get a smaller stack
+    assert wide.stack_cap < thin.stack_cap
+    node_bytes = 4 * ((1 << 20) // 32 + 4)
+    assert wide.stack_cap * node_bytes <= 4 * 2**20 or \
+        wide.stack_cap == 2 * (rt.push_cap + rt.steal_max + rt.expand_batch)
+    # explicit stack_cap is never overridden
+    assert RuntimeConfig(stack_cap=777).resolve(
+        ShapeBucket(1 << 20, 128, 65536), 1).stack_cap == 777
+
+
+def test_runtime_resolve_is_bucket_deterministic():
+    """Same-bucket datasets resolve to the same EngineConfig (cache key)."""
+    db1, l1, _ = small_problem(seed=0)
+    db2, l2, _ = small_problem(seed=9)
+    ds1, ds2 = Dataset.from_dense(db1, l1), Dataset.from_dense(db2, l2)
+    assert ds1.bucket == ds2.bucket
+    rt = RuntimeConfig()
+    assert rt.resolve(ds1.bucket, 4) == rt.resolve(ds2.bucket, 4)
+
+
+# ------------------------------------------------- warm-vs-cold equivalence
+def test_warm_query_zero_compiles_and_bit_identical_results():
+    db1, l1, _ = small_problem(seed=0)
+    db2, l2, _ = small_problem(seed=4)
+    session = MinerSession(runtime=RUNTIME)
+
+    rep1 = session.mine(Dataset.from_dense(db1, l1, name="q1"))
+    ci1 = session.cache_info()
+    assert rep1.cold
+    assert ci1.misses == len(rep1.phases) == 3
+    assert all(p.compile_s > 0 for p in rep1.phases)
+
+    # second query, same bucket: ZERO new compiles, all phases warm
+    rep2 = session.mine(Dataset.from_dense(db2, l2, name="q2"))
+    ci2 = session.cache_info()
+    assert ci2.misses == ci1.misses
+    assert ci2.hits == ci1.hits + len(rep2.phases)
+    assert not rep2.cold
+    assert all(p.cache_hit and p.compile_s == 0.0 for p in rep2.phases)
+
+    # both queries bit-identical to fresh legacy runs (incl. exact P-values)
+    for rep, (db, labels) in ((rep1, (db1, l1)), (rep2, (db2, l2))):
+        ref = _legacy(db, labels)
+        assert rep.min_sup == ref["min_sup"]
+        assert rep.correction_factor == ref["correction_factor"]
+        assert rep.delta == ref["delta"]
+        assert rep.n_significant == ref["n_significant"]
+        assert _keys(rep.results) == _keys(ref["results"])
+
+
+def test_warm_alpha_change_reuses_programs():
+    """alpha enters as runtime data (thresholds/delta), never the cache key."""
+    db, labels, _ = small_problem(seed=2)
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+    session.mine(ds)
+    before = session.cache_info()
+    rep = session.mine(ds, alpha=0.01)
+    after = session.cache_info()
+    assert after.misses == before.misses
+    assert rep.alpha == 0.01
+    ref = _legacy(db, labels)  # alpha=0.05 sanity: stricter level, fewer hits
+    assert rep.n_significant <= ref["n_significant"]
+
+
+def test_fused23_session_matches_three_phase():
+    db, labels, _ = small_problem(seed=4)
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+    a = session.mine(ds, pipeline="three_phase")
+    b = session.mine(ds, pipeline="fused23")
+    assert len(b.phases) == 2
+    assert (b.min_sup, b.correction_factor, b.delta, b.n_significant) == \
+        (a.min_sup, a.correction_factor, a.delta, a.n_significant)
+    assert _keys(b.results) == _keys(a.results)
+    # fused23 reuses the already-warm lamp1 program: only count2d compiles
+    assert session.cache_info().misses == 4
+
+
+def test_unknown_pipeline_raises():
+    db, labels, _ = small_problem()
+    session = MinerSession(runtime=RUNTIME)
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        session.mine(Dataset.from_dense(db, labels), pipeline="nope")
+
+
+# ----------------------------------------------------------- legacy shim
+def test_lamp_distributed_shim_dict_and_deprecation():
+    db, labels, _ = small_problem(seed=0)
+    res = _legacy(db, labels)
+    assert set(res) == {
+        "lambda_final", "min_sup", "correction_factor", "delta",
+        "n_significant", "results", "phase_outputs",
+    }
+    assert isinstance(res["results"], ResultSet)
+    assert len(res["phase_outputs"]) == 3
+    assert all(isinstance(p, MineOutput) for p in res["phase_outputs"])
+    fused = _legacy(db, labels, pipeline="fused23")
+    assert len(fused["phase_outputs"]) == 2
+    assert fused["n_significant"] == res["n_significant"]
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown pipeline"):
+            lamp_distributed(db, labels, pipeline="nope")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="conflicts"):
+            lamp_distributed(db, labels, fuse_phase23=True, pipeline="three_phase")
+
+
+def test_engine_pipelines_reexport():
+    from repro.core.engine import PIPELINES
+
+    assert set(PIPELINES) == {"three_phase", "fused23"}
+
+
+# ------------------------------------------------------------- item names
+def test_item_names_flow_to_describe_and_exports(tmp_path):
+    db, labels, _ = small_problem(seed=0)
+    names = tuple(f"rs{j:04d}" for j in range(db.shape[1]))
+    session = MinerSession(runtime=RUNTIME)
+    rep = session.mine(Dataset.from_dense(db, labels, item_names=names))
+    rs = rep.results
+    assert len(rs) > 0
+    p0 = rs.patterns[0]
+
+    # human-readable output shows names
+    text = rs.describe(3)
+    assert names[p0.items[0]] in text
+
+    # TSV keeps the machine-readable index column AND adds a names column
+    tsv = rs.to_tsv(str(tmp_path / "p.tsv"))
+    header = tsv.splitlines()[0].split("\t")
+    assert header[:7] == ["rank", "items", "size", "support", "pos_support",
+                          "pvalue", "qvalue"]
+    assert header[7] == "names"
+    row = dict(zip(header, tsv.splitlines()[1].split("\t")))
+    assert tuple(map(int, row["items"].split(","))) == p0.items
+    assert row["names"] == ",".join(names[j] for j in p0.items)
+
+    # JSON: indices stay, names added per pattern
+    payload = json.loads(rs.to_json())
+    assert payload["patterns"][0]["items"] == list(p0.items)
+    assert payload["patterns"][0]["names"] == [names[j] for j in p0.items]
+
+    # unnamed datasets keep the legacy formats exactly
+    rep2 = MinerSession(runtime=RUNTIME).mine(Dataset.from_dense(db, labels))
+    assert "names" not in rep2.results.to_tsv().splitlines()[0].split("\t")
+    assert "names" not in json.loads(rep2.results.to_json())["patterns"][0]
+
+
+# ----------------------------------------------- multi-device warm session
+def run_subproc(spec: dict) -> dict:
+    from repro.core.collectives import host_device_count_env
+
+    env = host_device_count_env(spec["n_devices"])
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "engine_subproc_main.py"),
+         json.dumps(spec)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_session_8dev_warm_query_zero_compiles_and_matches_1dev():
+    """8 simulated miners: the warm query compiles nothing and both queries
+    return byte-identical patterns to a 1-device in-process session."""
+    prob = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20,
+                seed=1, seed2=5)
+    got = run_subproc(dict(prob, mode="session", n_devices=8))
+    assert got["misses_per_query"][0] == 3          # cold: one per phase
+    assert got["misses_per_query"][1] == 3          # warm: zero new compiles
+    assert got["n_programs"] == 3
+    assert got["queries"][0]["cold"] and not got["queries"][1]["cold"]
+
+    session = MinerSession(devices=jax.devices()[:1], runtime=RUNTIME)
+    for q, seed in zip(got["queries"], (1, 5)):
+        db, labels, _ = small_problem(seed=seed)
+        rep = session.mine(Dataset.from_dense(db, labels))
+        assert q["min_sup"] == rep.min_sup
+        assert q["correction_factor"] == rep.correction_factor
+        assert q["n_significant"] == rep.n_significant
+        want = [[list(p.items), p.support, p.pos_support] for p in rep.results]
+        assert [p[:3] for p in q["patterns"]] == want
+        for (_, _, _, pv, qv), p in zip(q["patterns"], rep.results):
+            assert pv == pytest.approx(p.pvalue, rel=1e-12)
+            assert qv == pytest.approx(p.qvalue, rel=1e-12)
