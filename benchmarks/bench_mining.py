@@ -10,19 +10,29 @@ plus the repeated-query (cold vs warm session) latency benchmark.
 
   PYTHONPATH=src python -m benchmarks.bench_mining            # full baseline
   PYTHONPATH=src python -m benchmarks.bench_mining --smoke    # CI-sized
+  PYTHONPATH=src python -m benchmarks.bench_mining --compare OLD.json NEW.json
 
 Writes BENCH_mining.json at the repo root: per problem, the expanded node
-count, the calibrated per-node cost, measured wall seconds, and the modeled
-speedup vs miner count P (benchmarks/common.py documents the makespan model —
-this container is single-core, so multi-miner wall-clock is meaningless and
-the per-superstep trace gives the exact parallel schedule instead).  The
-`repeated_query` section drives one `repro.api.MinerSession` with reseeded
-same-bucket queries: the first is cold (compiles one program per phase),
-the rest replay warm compiled programs — `cold_over_warm` is the latency
-win the session API exists for, and `compiles` must equal the phase count.
+count, the calibrated per-node cost, measured wall seconds (warm: each P
+runs on a MinerSession whose program is already compiled, so the timed call
+is a zero-trace dispatch and wall_s measures the engine, not jit), and the
+modeled speedup vs miner count P (benchmarks/common.py documents the
+makespan model — this container is single-core, so multi-miner wall-clock
+is meaningless and the per-superstep trace gives the exact parallel
+schedule instead).  The
+`superstep_breakdown` section attributes the per-superstep constant to the
+three phases (expand / steal / global-sync µs, by differencing warm runs
+with the steal exchange and the lambda sync toggled) and tabulates bytes
+moved per round before vs after the deque/gating redesign (DESIGN.md §6).
+The `repeated_query` section drives one `repro.api.MinerSession` with
+reseeded same-bucket queries: the first is cold (compiles one program per
+phase), the rest replay warm compiled programs — `cold_over_warm` is the
+latency win the session API exists for, and `compiles` must equal the phase
+count.
 
 The committed BENCH_mining.json is the perf trajectory's anchor: later perf
-PRs rerun this entry point and compare against it.
+PRs rerun this entry point and compare against it (`--compare` prints the
+old-vs-new warm wall table as markdown; CI appends it to the job summary).
 """
 
 import argparse
@@ -46,8 +56,94 @@ SMOKE_PROBLEMS = {
 }
 
 
+def _session(devices, runtime):
+    from repro.api import MinerSession
+
+    return MinerSession(devices=devices, runtime=runtime)
+
+
+def _timed_warm(session, ds, mode, min_sup, repeats: int = 3):
+    """(wall_s, MineOutput) of a *warm* engine pass: the first call compiles
+    (or hits the session cache), then the best of `repeats` timed calls is
+    reported — a zero-trace dispatch each, so wall_s measures the engine,
+    not jit, and the min damps this container's scheduling noise."""
+    session.run_phase(ds, mode, min_sup=min_sup)
+    best, out = None, None
+    for _ in range(repeats):
+        t0 = time.time()
+        ph = session.run_phase(ds, mode, min_sup=min_sup)
+        wall = time.time() - t0
+        if best is None or wall < best:
+            best, out = wall, ph.output
+    return best, out
+
+
+def superstep_breakdown(ds, ms, devices, runtime, base) -> dict:
+    """Attribute the per-superstep constant to expand / steal / global-sync.
+
+    One compiled superstep can't be phase-timed from the host, so the
+    breakdown differences warm runs with one phase's cost toggled: the steal
+    share comes from steal_enabled on/off (per-step normalized — the two
+    runs take different superstep counts), the lambda-sync share from
+    sync_period 1 vs 16 in mode "lamp1", and expand is the remainder.  The
+    bytes-per-round table is analytic from the config: the old design moved
+    the full [stack_cap, W+4] stack twice per round (shift-on-steal), sent
+    4 ppermutes, and psum'd the [n+2] histogram every round; the deque
+    moves one packed [steal_max, W+5] payload on fired rounds only and
+    syncs the histogram delta every sync_period rounds (plus the [P]-int
+    hunger census).
+    """
+    p = len(devices)
+    cfg = runtime.resolve(ds.bucket, p)
+    w = ds.bucket.words
+    node_words = w + 4  # occ [W]u32 + meta [4]i32
+
+    wall_c, r_c = base  # bench_problem's warm count run at this same P
+    s_c = max(r_c.supersteps, 1)
+    wall_ns, r_ns = _timed_warm(
+        _session(devices, runtime.with_options(steal_enabled=False)),
+        ds, "count", ms)
+    steal_us = wall_c / s_c * 1e6 - wall_ns / max(r_ns.supersteps, 1) * 1e6
+    wall_l1, r_l1 = _timed_warm(
+        _session(devices, runtime.with_options(sync_period=1)), ds, "lamp1", 1)
+    wall_l16, r_l16 = _timed_warm(
+        _session(devices, runtime.with_options(sync_period=16)), ds, "lamp1", 1)
+    # differencing warm runs bottoms out at this container's noise floor;
+    # clamp the derived shares at 0 rather than report a negative phase
+    sync_us = max(0.0, (wall_l1 / max(r_l1.supersteps, 1)
+                        - wall_l16 / max(r_l16.supersteps, 1))
+                  * 1e6 / (1 - 1 / 16))
+    steal_us = max(0.0, steal_us)
+    total_us = wall_c / s_c * 1e6
+    fired = int(r_c.stats["steal_rounds"][0])
+    fired_frac = fired / s_c
+    payload = (cfg.steal_max * (node_words + 1)) * 4  # packed occ|meta|k rows
+    nb = ds.n_transactions + 2
+    return {
+        "P": p,
+        "supersteps": s_c,
+        "steal_rounds_fired": fired,
+        "fired_fraction": round(fired_frac, 4),
+        "per_step_us": {
+            "total": round(total_us, 1),
+            "steal": round(steal_us, 1),
+            "global_sync": round(sync_us, 1),
+            "expand": round(total_us - steal_us, 1),  # count mode has no hist sync
+        },
+        # per miner per round; "before" = the pre-deque shift-on-steal design
+        "bytes_per_round": {
+            "stack_shift_before": 2 * cfg.stack_cap * node_words * 4,
+            "stack_shift_after": 0,
+            "steal_payload_before": payload,                    # every round
+            "steal_payload_after": round(payload * fired_frac),  # gated rounds
+            "hist_sync_before": nb * 4,                          # every round
+            "hist_sync_after": round(nb * 4 / cfg.sync_period + 4 * p),  # +census
+        },
+    }
+
+
 def bench_problem(name: str, scales: dict, p_values) -> dict:
-    from repro.core.engine import EngineConfig, mine
+    from repro.api import Dataset, RuntimeConfig
     from repro.core.lamp import lamp
     from repro.data.synthetic import paper_problem
 
@@ -56,40 +152,44 @@ def bench_problem(name: str, scales: dict, p_values) -> dict:
     db, labels, _, spec = paper_problem(
         name, scales["scale_items"], scales["scale_trans"]
     )
+    ds = Dataset.from_dense(db, labels, name=spec.name)
     ref = lamp(db, labels, alpha=0.05)
     ms = ref.min_sup
     devices = jax.devices()
-    cfg = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+    runtime = RuntimeConfig(expand_batch=16, stack_cap=8192,
+                            trace_cap=TRACE_CAP)
 
-    # single-device run calibrates c_node (warm-up excludes compile time)
-    mine(db, labels, mode="count", min_sup=ms, cfg=cfg, devices=devices[:1])
-    t0 = time.time()
-    r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg, devices=devices[:1])
-    wall1 = time.time() - t0
+    # warm single-device run calibrates c_node (zero-compile dispatch)
+    wall1, r1 = _timed_warm(_session(devices[:1], runtime), ds, "count", ms)
     nodes = int(r1.stats["popped"].sum())
     c_node = wall1 / max(nodes, 1)
     t1 = makespan(r1.trace, r1.supersteps, c_node)
 
     speedup, wall_s = {"1": 1.0}, {"1": round(wall1, 3)}
+    base = (wall1, r1)  # the warm count run at p_max, reused by the breakdown
+    p_max = 1
     for p in p_values:
         if p <= 1 or p > len(devices):
             continue
-        t0 = time.time()
-        rp = mine(db, labels, mode="count", min_sup=ms, cfg=cfg,
-                  devices=devices[:p])
-        wall_s[str(p)] = round(time.time() - t0, 3)
+        wall_p, rp = _timed_warm(_session(devices[:p], runtime), ds, "count", ms)
+        wall_s[str(p)] = round(wall_p, 3)
         tp = makespan(rp.trace, rp.supersteps, c_node)
         speedup[str(p)] = round(t1 / tp, 3)
+        if p > p_max:
+            base, p_max = (wall_p, rp), p
     return {
-        "problem": spec.name,
-        "items": spec.n_items,
-        "transactions": spec.n_transactions,
+        "problem": ds.name,
+        "items": ds.n_items,
+        "transactions": ds.n_transactions,
         "min_sup": ms,
         "nodes": nodes,
         "c_node_us": round(c_node * 1e6, 3),
         "c_round_us": C_ROUND_S * 1e6,
         "modeled_speedup_vs_P": speedup,
         "wall_s": wall_s,
+        "superstep_breakdown": superstep_breakdown(
+            ds, ms, devices[:p_max], runtime, base
+        ),
     }
 
 
@@ -124,6 +224,44 @@ def bench_repeated_queries(name: str, scales: dict, n_queries: int = 6) -> dict:
     }
 
 
+def compare_markdown(old: dict, new: dict) -> str:
+    """Old-vs-new warm wall table (markdown; CI appends to the job summary)."""
+    lines = [
+        "### Mining perf: old vs new (warm wall_s)",
+        "",
+        "| problem | P | old s | new s | speedup |",
+        "|---|---|---|---|---|",
+    ]
+    old_by = {p["problem"]: p for p in old.get("problems", [])}
+    for prob in new.get("problems", []):
+        ref = old_by.get(prob["problem"])
+        for p, wall in sorted(prob["wall_s"].items(), key=lambda kv: int(kv[0])):
+            old_wall = (ref or {}).get("wall_s", {}).get(p)
+            ratio = f"{old_wall / wall:.2f}x" if old_wall and wall else "n/a"
+            lines.append(
+                f"| {prob['problem']} | {p} | "
+                f"{old_wall if old_wall is not None else 'n/a'} | {wall} | {ratio} |"
+            )
+    rq_old = old.get("repeated_query", {}).get("warm_mean_s")
+    rq_new = new.get("repeated_query", {}).get("warm_mean_s")
+    if rq_new:
+        ratio = f"{rq_old / rq_new:.2f}x" if rq_old else "n/a"
+        lines.append(f"| repeated_query warm_mean | - | {rq_old} | {rq_new} | {ratio} |")
+    bd = next(iter(new.get("problems", [])), {}).get("superstep_breakdown")
+    if bd:
+        lines += [
+            "",
+            f"per-superstep (P={bd['P']}): total {bd['per_step_us']['total']}µs"
+            f" = expand {bd['per_step_us']['expand']}µs"
+            f" + steal {bd['per_step_us']['steal']}µs"
+            f" (sync {bd['per_step_us']['global_sync']}µs/step in lamp1);"
+            f" steal rounds fired {bd['steal_rounds_fired']}/{bd['supersteps']},"
+            f" bytes/round {bd['bytes_per_round']['stack_shift_before']}"
+            f" -> {bd['bytes_per_round']['steal_payload_after']}",
+        ]
+    return "\n".join(lines) + "\n"
+
+
 def run(problems: dict, p_values=(1, 2, 4, 8), out_path: str = DEFAULT_OUT) -> dict:
     t0 = time.time()
     rq_name = next(iter(problems))
@@ -146,7 +284,14 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized problems (same schema, smaller scales)")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    help="print the old-vs-new warm-wall markdown table for "
+                         "two existing result files and exit (no benchmark run)")
     args = ap.parse_args(argv)
+    if args.compare:
+        with open(args.compare[0]) as f_old, open(args.compare[1]) as f_new:
+            print(compare_markdown(json.load(f_old), json.load(f_new)))
+        return
     payload = run(SMOKE_PROBLEMS if args.smoke else BENCH_PROBLEMS,
                   out_path=args.out)
     print(json.dumps(payload, indent=1))

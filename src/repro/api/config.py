@@ -15,6 +15,13 @@ word width W = ceil(transactions/32): the old items-only rule ignored W, so
 scaling transactions up (scale_trans) silently multiplied stack bytes.
 Resolution uses bucket dims, not exact dims, so same-bucket datasets
 resolve to the same EngineConfig and share compiled programs.
+
+Two knobs resolve to backend-/bucket-concrete values here and therefore
+land in the program cache key: `kernel_impl="auto"` becomes "pallas" on TPU
+and "ref" elsewhere (`repro.core.expand.resolve_kernel_impl`), and
+`sync_period` — the superstep interval between lambda/histogram syncs
+(DESIGN.md §6) — passes through verbatim, so sessions with different sync
+cadences never share a compiled superstep program.
 """
 
 from __future__ import annotations
@@ -22,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass, fields, replace
 
 from repro.core.engine import EngineConfig
+from repro.core.expand import resolve_kernel_impl
 
 from .dataset import ShapeBucket
 
@@ -50,8 +58,10 @@ class RuntimeConfig:
     n_random_perms: int = 4
     seed: int = 0
     steal_enabled: bool = True
-    kernel_impl: str = "ref"       # "ref" | "pallas" (TPU) | "pallas_interpret"
+    kernel_impl: str = "auto"      # "auto" (pallas on TPU, ref elsewhere) |
+    #                                "ref" | "pallas" | "pallas_interpret"
     trace_cap: int = 0
+    sync_period: int = 4           # supersteps between lambda/histogram syncs
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
 
     @classmethod
@@ -88,6 +98,9 @@ class RuntimeConfig:
             n_random_perms=self.n_random_perms,
             seed=self.seed,
             steal_enabled=self.steal_enabled,
-            kernel_impl=self.kernel_impl,
+            # "auto" resolves here — per backend — so the resolved config
+            # (and with it the session's program cache key) is concrete
+            kernel_impl=resolve_kernel_impl(self.kernel_impl),
             trace_cap=self.trace_cap,
+            sync_period=self.sync_period,
         )

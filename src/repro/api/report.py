@@ -30,6 +30,7 @@ class PhaseReport:
     lam_final: int
     n_nodes: int               # total nodes popped across miners
     steals: int                # total steal receptions across miners
+    steal_rounds: int          # hunger-gated exchange rounds that executed
     emit_dropped: int          # pattern records lost to out_cap saturation
     output: MineOutput = field(repr=False)  # full raw telemetry
 

@@ -6,7 +6,10 @@ device mesh and a cache of AOT-compiled BSP programs keyed by
 
     (mode, shape bucket, resolved RuntimeConfig)
 
-— everything the compiled artifact actually depends on.  Statistical
+— everything the compiled artifact actually depends on (resolution makes
+the key concrete: `kernel_impl="auto"` becomes the backend's kernel and
+`sync_period` — the lambda-sync cadence baked into the superstep program —
+rides along, so different cadences never collide in the cache).  Statistical
 parameters (alpha / min_sup / delta) and the dataset's exact dims enter the
 program as runtime arguments, so:
 
@@ -193,6 +196,9 @@ class MinerSession:
             lam_final=out.lam_final,
             n_nodes=int(out.stats["popped"].sum()),
             steals=int(out.stats["steals_got"].sum()),
+            # gated rounds actually executed: per-miner counters are all
+            # equal (the census is replicated), so read miner 0's
+            steal_rounds=int(out.stats["steal_rounds"][0]),
             emit_dropped=out.emit_dropped,
             output=out,
         )

@@ -143,6 +143,11 @@ def ppermute(x, perm: Sequence[tuple[int, int]], axis_name: str = MINERS_AXIS):
     return lax.ppermute(x, axis_name, perm=list(perm))
 
 
+def axis_index(axis_name: str = MINERS_AXIS):
+    """This miner's position on the mesh axis (0..P-1), as a traced scalar."""
+    return lax.axis_index(axis_name)
+
+
 # ----------------------------------------------------------------------- mesh
 def make_miner_mesh(devices=None, axis_name: str = MINERS_AXIS) -> Mesh:
     """1-D mesh over all (or the given) devices — one logical miner each."""

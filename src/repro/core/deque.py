@@ -1,0 +1,70 @@
+"""Circular work deque over fixed [CAP, ...] storage (DESIGN.md §6).
+
+The per-miner stack used to be a flat array with slot 0 pinned to the
+physical bottom: every steal round removed the donated bottom-k by a
+full-stack ``jnp.take`` shift of the 2 payload arrays — O(stack_cap * W)
+memory traffic per round whether or not anyone was hungry.  The deque keeps
+the same fixed storage but addresses it circularly through two scalars:
+
+    head  physical row of the logical bottom (slot 0, the oldest node)
+    sp    live node count; logical slot i lives at (head + i) % cap
+
+Expansion pops and pushes at the logical *top* by pointer arithmetic; a
+steal donates the logical *bottom-k* (oldest, shallowest subtrees) with
+O(steal_max) gathers and advances ``head`` — no shift ever happens.  The
+visible semantics (pop order, donated node identity) are exactly the old
+shift-stack's; tests/test_deque_stack.py property-checks that equivalence
+against a NumPy oracle.
+
+All helpers are pure index/pointer arithmetic on jnp (or np) scalars and
+work inside compiled superstep bodies; the payload arrays themselves are
+gathered/scattered by the callers (core/expand.py, core/steal.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "advance_head",
+    "bottom_indices",
+    "push_positions",
+    "top_indices",
+]
+
+
+def top_indices(head, sp, rows, cap: int):
+    """Physical rows of the top ``len(rows)`` nodes, top-first.
+
+    ``rows`` is an offset vector (0 = current top).  Offsets past the bottom
+    wrap to in-range garbage rows; callers mask with ``rows < sp``.
+    """
+    return (head + sp - 1 - rows) % cap
+
+
+def bottom_indices(head, rows, cap: int):
+    """Physical rows of the bottom ``len(rows)`` nodes, bottom-first.
+
+    Used both to gather a donation's payload and to scatter a received one
+    (a receiver is empty, so its bottom region is free).
+    """
+    return (head + rows) % cap
+
+
+def push_positions(head, base_sp, offsets, valid, cap: int):
+    """Scatter positions for pushing ``offsets``-th new nodes above ``base_sp``.
+
+    Returns ``(pos, overflow)``: physical rows for valid, in-capacity pushes
+    and ``cap`` (out of bounds — dropped by ``.at[].set(mode="drop")``) for
+    the rest; ``overflow`` is True when any valid push didn't fit.
+    """
+    logical = base_sp + offsets
+    fits = logical < cap
+    overflow = jnp.any(valid & ~fits)
+    pos = jnp.where(valid & fits, (head + logical) % cap, cap)
+    return pos, overflow
+
+
+def advance_head(head, k, cap: int):
+    """Consume the bottom-k nodes (a donation): slide the bottom pointer."""
+    return (head + k) % cap

@@ -9,12 +9,21 @@ One logical miner per device.  The whole search runs as a single compiled
               validation, closed-set counting, child generation (core/lcm.py
               documents the deferred-PPC scheme).
   2. STEAL    core/steal.py — one lifeline/random exchange round over the
-              schedule from core/lifeline.py; REQUEST/GIVE/REJECT collapses
-              into one paired ppermute exchange (DESIGN.md §2).
-  3. GLOBAL   core/global_sync.py — psum the support histogram -> recompute
-              lambda (paper §4.4's piggyback; staleness only costs work),
-              psum stack sizes -> exact BSP termination test (paper §4.3's
-              DTD is only needed on the async host plane).
+              schedule from core/lifeline.py; REQUEST rides the hunger
+              census, GIVE/REJECT is one packed ppermute, gated via
+              `lax.cond` on "anyone hungry" (DESIGN.md §2/§6).
+  3. GLOBAL   core/global_sync.py — the [P]-int hunger census doubles as
+              the exact BSP termination test (paper §4.3's DTD is only
+              needed on the async host plane); mode "lamp1" additionally
+              psums the *since-last-sync delta* of the support histogram
+              every `sync_period` supersteps and recomputes lambda (paper
+              §4.4's piggyback; staleness only costs work, never
+              correctness).
+
+Each per-miner stack is a circular deque over fixed [stack_cap, W] storage
+(core/deque.py): EXPAND pops/pushes at the logical top by pointer
+arithmetic, a steal donates the logical bottom-k with O(steal_max) gathers
+and advances the bottom pointer — nothing ever shifts.
 
 This module holds only the config, the while-loop driver that wires the
 phases together, and the host-side pre/postprocess; every version-sensitive
@@ -66,16 +75,13 @@ from .bitmap import full_occ, num_words, pack_db, supports_np
 from .collectives import MINERS_AXIS
 from .expand import build_expand
 from .fisher import lamp_count_thresholds
-from .global_sync import build_global_sync, recompute_lambda
+from .global_sync import build_global_sync, hunger_census, recompute_lambda
 from .lifeline import LifelineSchedule, build_schedule
+from .stats import STAT_NAMES, Stat
 from .steal import build_steal_round
 
 INT_MAX = np.int32(2**31 - 1)
 
-STAT_NAMES = (
-    "popped", "rejected", "closed", "pushed", "steals_got", "gives",
-    "idle_steps", "supersteps", "overflow", "stolen_nodes", "emit_dropped",
-)
 _NSTAT = len(STAT_NAMES)
 
 
@@ -90,8 +96,9 @@ class EngineConfig:
     n_random_perms: int = 4
     seed: int = 0
     steal_enabled: bool = True     # False = the paper's "naive approach" (§5.4)
-    kernel_impl: str = "ref"       # "ref" | "pallas" (TPU) | "pallas_interpret"
+    kernel_impl: str = "auto"      # "auto" | "ref" | "pallas" | "pallas_interpret"
     trace_cap: int = 0             # >0: record popped-per-superstep [trace_cap]
+    sync_period: int = 4           # supersteps between lambda/histogram syncs
 
 
 @dataclass
@@ -241,35 +248,56 @@ def build_mine_step(
     """
     NB = n + 2
     NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
+    # lambda-sync state (last-synced global hist + local snapshot) only
+    # exists in mode "lamp1"; other modes carry 1-element dummies
+    SNB = NB if mode == "lamp1" else 1
+    n_proc = schedule.n_proc
     expand = build_expand(n=n, n_pos=n_pos, m=m, cfg=cfg, mode=mode)
     steal_round = build_steal_round(schedule, cfg, axis)
-    global_sync = build_global_sync(nb=NB, mode=mode, axis=axis)
+    global_sync = build_global_sync(
+        nb=NB, mode=mode, sync_period=cfg.sync_period, axis=axis
+    )
 
     def body(carry, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act):
-        (occ_stack, meta, sp, hist, hist2d, lam, t, stats, out_occ, out_meta,
-         out_ptr, n_sig, trace, _work) = carry
-        popped_before = stats[0]
+        (occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc, hist2d, lam,
+         t, stats, out_occ, out_meta, out_ptr, n_sig, trace, _work) = carry
+        popped_before = stats[Stat.POPPED]
         (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta, out_ptr,
          sig_cnt) = expand(
-            occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
+            occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw, db_wm,
             pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act,
         )
         if cfg.trace_cap:
             trace = trace.at[jnp.minimum(t, cfg.trace_cap - 1)].add(
-                stats[0] - popped_before
+                stats[Stat.POPPED] - popped_before
             )
         n_sig = n_sig + sig_cnt
+        # the [P]-int hunger census: REQUEST side of the steal exchange,
+        # gate for its payload ppermute, and the exact termination test
+        # (steals only redistribute; they cannot turn an all-empty
+        # superstep into work)
+        hungry_vec = hunger_census(sp, n_proc, axis)
+        n_hungry = jnp.sum(hungry_vec)
         if cfg.steal_enabled:
-            occ_stack, meta, sp, got, gave, k_given = steal_round(t, occ_stack, meta, sp)
-            stats = stats.at[4].add(got)
-            stats = stats.at[5].add(gave)
-            stats = stats.at[9].add(k_given)
-        stats = stats.at[6].add((sp == 0).astype(jnp.int32))
-        stats = stats.at[7].add(1)
+            occ_stack, meta, sp, head, got, gave, k_given = steal_round(
+                t, hungry_vec, n_hungry, occ_stack, meta, sp, head
+            )
+            stats = stats.at[Stat.STEALS_GOT].add(got)
+            stats = stats.at[Stat.GIVES].add(gave)
+            stats = stats.at[Stat.STOLEN_NODES].add(k_given)
+            stats = stats.at[Stat.STEAL_ROUNDS].add(
+                (n_hungry > 0).astype(jnp.int32)
+            )
+        stats = stats.at[Stat.IDLE_STEPS].add((sp == 0).astype(jnp.int32))
+        stats = stats.at[Stat.SUPERSTEPS].add(1)
 
-        lam, work = global_sync(hist, sp, lam, thr)
-        return (occ_stack, meta, sp, hist, hist2d, lam, t + 1, stats, out_occ,
-                out_meta, out_ptr, n_sig, trace, work)
+        lam, g_hist_acc, hist_snap = global_sync(
+            t, hist, hist_snap, g_hist_acc, lam, thr
+        )
+        work = jnp.int32(n_proc) - n_hungry
+        return (occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc,
+                hist2d, lam, t + 1, stats, out_occ, out_meta, out_ptr, n_sig,
+                trace, work)
 
     def program(init_occ, init_meta, init_sp, db_mw, db_wm, pos_mask, thr,
                 lam0, delta, n_act, npos_act):
@@ -277,8 +305,11 @@ def build_mine_step(
         occ_stack = init_occ[0]
         meta = init_meta[0]
         sp = init_sp[0]
+        head = jnp.int32(0)
         w = occ_stack.shape[-1]
         hist = jnp.zeros(NB, jnp.int32)
+        hist_snap = jnp.zeros(SNB, jnp.int32)
+        g_hist_acc = jnp.zeros(SNB, jnp.int32)
         hist2d = jnp.zeros(NB2, jnp.int32)
         stats = jnp.zeros(_NSTAT, jnp.int32)
         out_occ = jnp.zeros((cfg.out_cap, w), jnp.uint32)
@@ -289,21 +320,27 @@ def build_mine_step(
         trace = jnp.zeros(max(cfg.trace_cap, 1), jnp.int32)
 
         def cond_fn(carry):
-            (_occ, _meta, _sp, _hist, _hist2d, _lam, t, _stats, _out_occ,
-             _out_meta, _out_ptr, _n_sig, _trace, work) = carry
-            # work was psum'd at the previous superstep boundary:
+            (_occ, _meta, _sp, _head, _hist, _snap, _ghist, _hist2d, _lam, t,
+             _stats, _out_occ, _out_meta, _out_ptr, _n_sig, _trace,
+             work) = carry
+            # work (miners with non-empty stacks) was psum'd at the previous
+            # superstep boundary:
             return (work > 0) & (t < cfg.max_steps)  # exact BSP termination
 
-        work0 = collectives.psum(sp, axis)
-        carry = (occ_stack, meta, sp, hist, hist2d, lam0, t, stats, out_occ,
-                 out_meta, out_ptr, n_sig, trace, work0)
+        work0 = jnp.int32(n_proc) - jnp.sum(hunger_census(sp, n_proc, axis))
+        carry = (occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc,
+                 hist2d, lam0, t, stats, out_occ, out_meta, out_ptr, n_sig,
+                 trace, work0)
         carry = lax.while_loop(
             cond_fn,
             lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act),
             carry,
         )
-        (_, _, _, hist, hist2d, lam, t, stats, out_occ, out_meta, out_ptr,
-         n_sig, trace, _) = carry
+        (_, _, _, _, hist, _, _, hist2d, lam, t, stats, out_occ, out_meta,
+         out_ptr, n_sig, trace, _) = carry
+        # one exact full-histogram psum at termination (the in-loop lambda
+        # only ever saw sync_period-stale deltas; postprocess replays the
+        # recursion from this exact histogram)
         g_hist = collectives.psum(hist, axis)
         g_hist2d = collectives.psum(hist2d, axis)  # once, at termination — not per step
         g_sig = collectives.psum(n_sig, axis)
@@ -417,14 +454,13 @@ def postprocess_phase(
     n_sig = int(g_sig)
     emit_dropped = int(stats_dict["emit_dropped"].sum())
     if mode in ("test", "count2d"):
-        # cross-device gather of the emitted pattern records
+        # cross-device gather of the emitted pattern records: one boolean
+        # mask over the flattened [P * out_cap] record axis, device-major —
+        # identical order to the old per-device slice-and-concat loop
         ptrs = out_ptr.reshape(-1)
-        occ_rows = [out_occ[p, : int(ptrs[p])] for p in range(n_proc)]
-        meta_rows = [out_meta[p, : int(ptrs[p])] for p in range(n_proc)]
-        sig_occ = (np.concatenate(occ_rows, axis=0) if occ_rows
-                   else np.zeros((0, packed.w_pad), np.uint32))
-        allmeta = (np.concatenate(meta_rows, axis=0) if meta_rows
-                   else np.zeros((0, 3), np.int32))
+        live = (np.arange(cfg.out_cap)[None, :] < ptrs[:, None]).reshape(-1)
+        sig_occ = out_occ.reshape(n_proc * cfg.out_cap, -1)[live]
+        allmeta = out_meta.reshape(n_proc * cfg.out_cap, 3)[live]
         sig_core, sig_sup, sig_pos = allmeta[:, 0], allmeta[:, 1], allmeta[:, 2]
         if emit_dropped:
             warnings.warn(

@@ -19,17 +19,34 @@ dropped but *counted* in the emit_dropped stat so the host can warn.
 This phase is pure per-miner compute — no collectives — so it is the natural
 unit to retarget at an accelerator kernel: `supports_gemm` dispatches on
 `cfg.kernel_impl` between the jnp reference contraction and the Pallas
-popcount-GEMM (kernels/support_count).
+popcount-GEMM (kernels/support_count); the default "auto" resolves per
+backend via `resolve_kernel_impl` (pallas on TPU, ref elsewhere).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .deque import push_positions, top_indices
 from .fisher import fisher_pvalue_jnp
+from .stats import Stat
 
-__all__ = ["supports_gemm", "build_expand"]
+__all__ = ["resolve_kernel_impl", "supports_gemm", "build_expand"]
+
+
+def resolve_kernel_impl(impl: str, backend: str | None = None) -> str:
+    """Resolve the "auto" kernel selection against the active backend.
+
+    "auto" means: the Pallas popcount-GEMM on TPU, the jnp reference
+    contraction everywhere else.  Concrete names pass through untouched, so
+    explicit choices (incl. "pallas_interpret" for CPU testing) still win.
+    """
+    if impl != "auto":
+        return impl
+    backend = jax.default_backend() if backend is None else backend
+    return "pallas" if backend == "tpu" else "ref"
 
 
 def supports_gemm(occ_nodes, db_mw, db_wm, impl: str):
@@ -54,22 +71,30 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     (needed only by the exact Fisher test); padded items have zero support,
     so they can never be accepted, counted, emitted, or become children.
 
-    expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-           pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act)
+    The stack is a circular deque (core/deque.py): `head` is the physical
+    row of the logical bottom, pops read below the logical top, and pushes
+    scatter above it — `head` itself only moves on steals, so EXPAND takes
+    it read-only.
+
+    expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
+           db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
+           npos_act)
       -> (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta,
           out_ptr, sig_cnt)
     """
     B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
+    kernel_impl = resolve_kernel_impl(cfg.kernel_impl)
     NB = n + 2
     testing = mode == "test"
     hist2d_mode = mode == "count2d"
     emitting = testing or hist2d_mode
 
-    def expand(occ_stack, meta, sp, hist, hist2d, lam, stats, db_mw, db_wm,
-               pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act):
+    def expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
+               db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
+               npos_act):
         take = jnp.minimum(sp, B)
         rows = jnp.arange(B)
-        node_idx = jnp.clip(sp - 1 - rows, 0, CAP - 1)
+        node_idx = top_indices(head, sp, rows, CAP)
         row_valid = rows < take
         occ_nodes = occ_stack[node_idx]          # [B, W]
         meta_nodes = meta[node_idx]              # [B, 4]
@@ -80,7 +105,7 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
         sp_after = sp - take
 
         alive = row_valid & (sup >= lam)
-        supports = supports_gemm(occ_nodes, db_mw, db_wm, cfg.kernel_impl)  # [B, M]
+        supports = supports_gemm(occ_nodes, db_mw, db_wm, kernel_impl)  # [B, M]
         item_ids = jnp.arange(m)[None, :]
         in_clo = supports == sup[:, None]
         prefix_ct = jnp.sum(in_clo & (item_ids < core[:, None]), axis=1)
@@ -113,7 +138,9 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
             rec = jnp.stack([core[src], sup[src], pos_sup[src]], axis=1)
             out_meta = out_meta.at[pos].set(rec, mode="drop")
             # overflowing emissions are dropped by the scatter; count them
-            stats = stats.at[10].add(jnp.maximum(out_ptr + sig_cnt - cfg.out_cap, 0))
+            stats = stats.at[Stat.EMIT_DROPPED].add(
+                jnp.maximum(out_ptr + sig_cnt - cfg.out_cap, 0)
+            )
             out_ptr = jnp.minimum(out_ptr + sig_cnt, cfg.out_cap)
 
         # ---- children
@@ -124,10 +151,16 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
             & (supports >= lam)
         )
         clo_cum_excl = jnp.cumsum(in_clo.astype(jnp.int32), axis=1) - in_clo.astype(jnp.int32)
-        flat = cand.reshape(-1)
-        cand_idx = jnp.nonzero(flat, size=C, fill_value=-1)[0]
-        valid_child = cand_idx >= 0
-        n_taken = jnp.sum(valid_child.astype(jnp.int32))
+        # compact the candidate indices via cumsum + vectorized binary
+        # search: jnp.nonzero(size=C) would lower to a [B*m]-trip scalar
+        # scan loop on CPU — measured as the single largest superstep cost
+        flat = cand.reshape(-1).astype(jnp.int32)
+        cand_cum = jnp.cumsum(flat)
+        n_taken = jnp.minimum(cand_cum[-1], C)  # children pushed this step
+        # index of the (c+1)-th set bit, ascending — nonzero's order exactly
+        cand_idx = jnp.searchsorted(cand_cum, jnp.arange(1, C + 1), side="left")
+        valid_child = cand_idx < flat.shape[0]
+        cand_idx = jnp.minimum(cand_idx, flat.shape[0] - 1)
         child_b = jnp.clip(cand_idx // m, 0, B - 1)
         child_j = jnp.clip(cand_idx % m, 0, m - 1)
         child_occ = occ_nodes[child_b] & db_mw[child_j]
@@ -140,10 +173,17 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
             ],
             axis=1,
         )
-        push_pos = jnp.where(valid_child, sp_after + jnp.arange(C), CAP + C)
-        overflow = jnp.any(valid_child & (push_pos >= CAP))
-        occ_stack = occ_stack.at[push_pos].set(child_occ, mode="drop")
-        meta = meta.at[push_pos].set(child_meta, mode="drop")
+        # the compacted child block is *contiguous* above sp_after, so the
+        # push is a full-array select + one gather instead of a C-row
+        # scatter (XLA's scatter expander would unroll that into a per-row
+        # thunk loop — measured as the dominant superstep cost on CPU)
+        logical = (jnp.arange(CAP) - head) % CAP  # logical slot per phys row
+        rel = logical - sp_after                  # index into the child block
+        in_push = (rel >= 0) & (rel < n_taken)
+        child_src = jnp.clip(rel, 0, C - 1)
+        occ_stack = jnp.where(in_push[:, None], child_occ[child_src], occ_stack)
+        meta = jnp.where(in_push[:, None], child_meta[child_src], meta)
+        overflow = sp_after + n_taken > CAP  # dropped pushes are fatal anyway
         sp2 = jnp.minimum(sp_after + n_taken, CAP)
 
         # ---- resume parents whose children overflowed the push cap
@@ -157,17 +197,21 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
         res_meta = jnp.stack(
             [cursor - 1, jnp.zeros(B, jnp.int32), sup, jnp.ones(B, jnp.int32)], axis=1
         )
-        res_pos = jnp.where(needs_resume, sp2 + jnp.cumsum(needs_resume) - 1, CAP + C)
-        overflow = overflow | jnp.any(needs_resume & (res_pos >= CAP))
+        res_pos, res_overflow = push_positions(
+            head, sp2, jnp.cumsum(needs_resume) - 1, needs_resume, CAP
+        )
+        overflow = overflow | res_overflow
         occ_stack = occ_stack.at[res_pos].set(occ_nodes, mode="drop")
         meta = meta.at[res_pos].set(res_meta, mode="drop")
         sp3 = jnp.minimum(sp2 + jnp.sum(needs_resume.astype(jnp.int32)), CAP)
 
-        stats = stats.at[0].add(jnp.sum(alive.astype(jnp.int32)))
-        stats = stats.at[1].add(jnp.sum((alive & ~ppc_ok).astype(jnp.int32)))
-        stats = stats.at[2].add(jnp.sum(counted.astype(jnp.int32)))
-        stats = stats.at[3].add(n_taken)
-        stats = stats.at[8].add(overflow.astype(jnp.int32))
+        stats = stats.at[Stat.POPPED].add(jnp.sum(alive.astype(jnp.int32)))
+        stats = stats.at[Stat.REJECTED].add(
+            jnp.sum((alive & ~ppc_ok).astype(jnp.int32))
+        )
+        stats = stats.at[Stat.CLOSED].add(jnp.sum(counted.astype(jnp.int32)))
+        stats = stats.at[Stat.PUSHED].add(n_taken)
+        stats = stats.at[Stat.OVERFLOW].add(overflow.astype(jnp.int32))
         return (occ_stack, meta, sp3, hist, hist2d, stats, out_occ, out_meta,
                 out_ptr, sig_cnt)
 

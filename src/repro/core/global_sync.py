@@ -1,27 +1,54 @@
-"""Superstep phase 3 — GLOBAL: fused histogram psum, lambda, termination.
+"""Superstep phase 3 — GLOBAL: hunger census, periodic lambda sync, termination.
 
-mode="lamp1": one fused collective carries [histogram | stack size] — the
-paper §4.4's piggyback of the frequency counter onto the termination traffic
-(staleness only costs work, never correctness) — then lambda is recomputed
-from the global histogram.  Other modes psum only the stack sizes.
+The per-superstep collective footprint is one tiny psum: `hunger_census`
+sums the one-hot "my stack is empty" vector, so every miner learns *which*
+miners are hungry ([P] ints, 4P bytes).  The census serves three masters:
+its sum gates the steal exchange (no payload ppermute unless someone is
+hungry), the vector itself replaces the steal round's REQUEST ppermute (the
+victim reads its requester's bit out of the census — core/steal.py), and
+`n_hungry == P` is the exact BSP termination test — the census runs after
+EXPAND, the steal round only redistributes nodes, so an all-hungry census
+at a superstep boundary implies zero outstanding work and no in-flight
+messages (collectives complete before the check; paper §4.3's DTD is only
+needed on the async host plane, core/termination.py).
 
-The returned `work` (global outstanding nodes) drives the exact BSP
-termination test: `work == 0` at a superstep boundary implies no work and no
-in-flight messages, because collectives complete before the check (paper
-§4.3's DTD is only needed on the async host plane; core/termination.py).
+mode="lamp1" additionally syncs the support histogram — but only every
+`sync_period` supersteps, and only the *delta* accumulated since the last
+sync (paper §4.4: the frequency counter piggybacks on whatever traffic
+already flows, and its staleness only costs extra work, never correctness:
+any closed set with support >= the final lambda survives every stale-lambda
+pruning decision, so the final lambda and every reported result are
+invariant; only sub-lambda histogram diagnostics and the superstep count can
+move).  `lax.cond` keeps the [n+2]-bin psum out of the non-boundary rounds
+entirely; the predicate is the replicated step counter, so every miner takes
+the same branch.
 
 `recompute_lambda` is shared between the on-device update (jnp, inside the
-compiled loop) and the host-side replay in `engine.mine()` that folds the
-root closed set into the final lambda (np).
+compiled loop) and the host-side replay in `engine.postprocess_phase` that
+folds the root closed set into the final lambda (np).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
-from .collectives import MINERS_AXIS, psum
+from .collectives import MINERS_AXIS, axis_index, psum
 
-__all__ = ["recompute_lambda", "build_global_sync"]
+__all__ = ["hunger_census", "recompute_lambda", "build_global_sync"]
+
+
+def hunger_census(sp, n_proc: int, axis: str = MINERS_AXIS):
+    """[P]-int psum of the one-hot hunger bit: who is out of work right now.
+
+    `vec[i] == 1` iff miner i's stack is empty; `vec.sum()` is the gate /
+    termination count.  4P bytes buys the whole REQUEST side of the steal
+    handshake — one collective where the old design used two.
+    """
+    vec = jnp.zeros(n_proc, jnp.int32).at[axis_index(axis)].set(
+        (sp == 0).astype(jnp.int32)
+    )
+    return psum(vec, axis)
 
 
 def recompute_lambda(g_hist, thr, lam, xp=jnp):
@@ -38,18 +65,38 @@ def recompute_lambda(g_hist, thr, lam, xp=jnp):
     return xp.maximum(xp.maximum(lam, best + 1), 1)
 
 
-def build_global_sync(*, nb: int, mode: str, axis: str = MINERS_AXIS):
-    """Returns global_sync(hist, sp, lam, thr) -> (lam, work)."""
-    dyn_lambda = mode == "lamp1"
+def build_global_sync(*, nb: int, mode: str, sync_period: int = 1,
+                      axis: str = MINERS_AXIS):
+    """Returns global_sync(t, hist, hist_snap, g_hist, lam, thr)
+    -> (lam, g_hist, hist_snap).
 
-    def global_sync(hist, sp, lam, thr):
-        if dyn_lambda:
-            # one fused collective: [histogram | stack size]
-            packed = psum(jnp.concatenate([hist, sp[None]]), axis)
-            g_hist, work = packed[:nb], packed[nb]
+    `hist` is the local full histogram, `hist_snap` its value at the last
+    sync, `g_hist` the merged global histogram as of the last sync.  For
+    modes other than "lamp1" the call is the identity (their lambda is a
+    static min_sup) and the engine carries 1-element dummies.
+    """
+    dyn_lambda = mode == "lamp1"
+    assert sync_period >= 1
+
+    def global_sync(t, hist, hist_snap, g_hist, lam, thr):
+        if not dyn_lambda:
+            return lam, g_hist, hist_snap
+
+        def do_sync(ops):
+            hist, hist_snap, g_hist, lam = ops
+            g_hist = g_hist + psum(hist - hist_snap, axis)  # delta only
             lam = recompute_lambda(g_hist, thr, lam).astype(jnp.int32)
-        else:
-            work = psum(sp, axis)
-        return lam, work
+            return lam, g_hist, hist
+
+        def skip(ops):
+            hist, hist_snap, g_hist, lam = ops
+            return lam, g_hist, hist_snap
+
+        if sync_period == 1:
+            return do_sync((hist, hist_snap, g_hist, lam))
+        return lax.cond(
+            (t + 1) % sync_period == 0,
+            do_sync, skip, (hist, hist_snap, g_hist, lam),
+        )
 
     return global_sync

@@ -1,11 +1,27 @@
 """Superstep phase 2 — STEAL: one lifeline/random work-exchange round.
 
-Hungry miners (empty stack) send a request bit along the round's permutation;
-a victim donates the bottom half of its stack (oldest/shallowest subtrees),
-capped at `steal_max` nodes, via the inverse permutation.  REQUEST/GIVE/
-REJECT collapses into one paired ppermute exchange (DESIGN.md §2); the round
-schedule (hypercube lifelines interleaved with frozen random permutations)
-comes from core/lifeline.py.
+Hungry miners (empty stack) request along the round's permutation; a victim
+donates the bottom half of its stack (oldest/shallowest subtrees), capped at
+`steal_max` nodes, via the inverse permutation.  REQUEST/GIVE/REJECT
+collapses into *one* collective (DESIGN.md §2/§6); the round schedule
+(hypercube lifelines interleaved with frozen random permutations) comes from
+core/lifeline.py.
+
+The exchange is engineered around two measured costs, not just bytes:
+
+* **No big arrays in control flow.**  The stacks are circular deques
+  (core/deque.py): a donation is an O(steal_max) bottom-k gather plus a
+  pointer advance, a reception an O(steal_max) scatter — both run
+  unconditionally (k = 0 rows are dropped), so the [stack_cap, W] arrays
+  never cross a `lax.switch`/`lax.cond` boundary (branch copies of the full
+  stack dwarfed the actual steal traffic in the old shift design).
+* **One collective, and only when needed.**  The requester's bit arrives
+  via the piggybacked hunger census (a static [rounds, P] victim->requester
+  table indexed into the census vector — no REQUEST ppermute), and the
+  reply rides a single ppermute of one packed [steal_max, W+5] u32 payload
+  (occ | bit-cast meta | k) instead of three.  The whole exchange is gated
+  on "anyone hungry" via `lax.cond` over that small payload, so rounds
+  where every miner has work move zero steal bytes.
 
 All communication goes through core/collectives.py — this module never
 imports a version-sensitive JAX API directly.
@@ -15,51 +31,98 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax.numpy as jnp
 from jax import lax
 
-from .collectives import MINERS_AXIS, ppermute
+from .collectives import MINERS_AXIS, axis_index, ppermute
+from .deque import advance_head, bottom_indices
 from .lifeline import LifelineSchedule
 
 __all__ = ["build_steal_round"]
 
 
 def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
-    """Returns steal_round(t, occ_stack, meta, sp)
-    -> (occ_stack, meta, sp, got, gave, k_given)."""
+    """Returns steal_round(t, hungry_vec, n_hungry, occ_stack, meta, sp, head)
+    -> (occ_stack, meta, sp, head, got, gave, k_given).
+
+    `hungry_vec` [P] is the superstep's hunger census (1 per empty miner),
+    `n_hungry` its sum; both are replicated psum results, so the `lax.cond`
+    gate takes the same branch on every miner.
+    """
     T = cfg.steal_max
     cap = cfg.stack_cap
+    assert cap >= T, "stack_cap must cover one full steal payload"
+    P = schedule.n_proc
+    R = schedule.n_rounds
+    # req_src[r, i]: the miner whose request reaches victim i in round r
+    # (requests travel requester -> victim; at most one per victim, since
+    # every round is a permutation), -1 when nobody can request from i.
+    req_src = np.full((R, P), -1, np.int32)
+    for r, (req_pairs, _rep_pairs) in enumerate(schedule.rounds):
+        for s, d in req_pairs:
+            req_src[r, d] = s
+    req_src = jnp.asarray(req_src)
 
-    def one_round(req_pairs, rep_pairs, occ_stack, meta, sp):
-        hungry = (sp == 0).astype(jnp.int32)
-        req_in = ppermute(hungry, req_pairs, axis)
+    reply_branches = [
+        functools.partial(ppermute, perm=rep, axis_name=axis)
+        for (_req, rep) in schedule.rounds
+    ]
+
+    def steal_round(t, hungry_vec, n_hungry, occ_stack, meta, sp, head):
+        r = t % R
+        me = axis_index(axis)
+        # REQUEST, with zero traffic: read the requester's hungry bit out of
+        # the piggybacked census instead of ppermuting it
+        requester = req_src[r, me]
+        req_in = jnp.where(requester >= 0,
+                           hungry_vec[jnp.clip(requester, 0, P - 1)], 0)
         donate = (req_in > 0) & (sp > 1)
         k = jnp.where(donate, jnp.minimum(sp // 2, T), 0)
         rows = jnp.arange(T)
+        src = bottom_indices(head, rows, cap)        # O(steal_max) gather
         pay_mask = rows < k
-        pay_occ = jnp.where(pay_mask[:, None], occ_stack[:T], 0)
-        pay_meta = jnp.where(pay_mask[:, None], meta[:T], 0)
-        # remove donated bottom-k, shift stack down
-        idx = jnp.arange(cap) + k
-        occ_stack = jnp.take(occ_stack, idx, axis=0, mode="fill", fill_value=0)
-        meta = jnp.take(meta, idx, axis=0, mode="fill", fill_value=0)
+        pay_occ = jnp.where(pay_mask[:, None], occ_stack[src], 0)
+        pay_meta = jnp.where(pay_mask[:, None], meta[src], 0)
+        # the donated bottom-k leaves by pointer arithmetic — no stack shift
+        head = advance_head(head, k, cap)
         sp = sp - k
-        # reply to (the only possible) requester
-        recv_k = ppermute(k, rep_pairs, axis)
-        recv_occ = ppermute(pay_occ, rep_pairs, axis)
-        recv_meta = ppermute(pay_meta, rep_pairs, axis)
+        # GIVE/REJECT: one packed [T, W+5] u32 ppermute (occ | meta | k);
+        # a zero k column *is* the REJECT.  Gated: no exchange unless
+        # someone is actually hungry this superstep.
+        packed = jnp.concatenate(
+            [
+                pay_occ,
+                lax.bitcast_convert_type(pay_meta, jnp.uint32),
+                jnp.broadcast_to(k.astype(jnp.uint32), (T, 1)),
+            ],
+            axis=1,
+        )
+        recv = lax.cond(
+            n_hungry > 0,
+            lambda p: lax.switch(r, reply_branches, p),
+            jnp.zeros_like,
+            packed,
+        )
+        w = occ_stack.shape[-1]
+        recv_k = lax.bitcast_convert_type(recv[0, -1], jnp.int32)
         got = recv_k > 0  # only ever true for requesters (they had sp == 0)
+        # a receiver is empty, so its bottom may live anywhere: pin it to
+        # physical row 0 and write one static [0:T) slice — a single
+        # dynamic-update-slice instead of a T-row scatter (identity rewrite
+        # on every non-receiver, since wmask is all-False there)
+        head = jnp.where(got, 0, head)
         wmask = (rows < recv_k)[:, None]
-        occ_stack = occ_stack.at[:T].set(jnp.where(wmask, recv_occ, occ_stack[:T]))
-        meta = meta.at[:T].set(jnp.where(wmask, recv_meta, meta[:T]))
+        occ_stack = occ_stack.at[:T].set(
+            jnp.where(wmask, recv[:, :w], occ_stack[:T])
+        )
+        meta = meta.at[:T].set(
+            jnp.where(wmask, lax.bitcast_convert_type(recv[:, w:-1], jnp.int32),
+                      meta[:T])
+        )
         sp = jnp.where(got, recv_k, sp)
-        return occ_stack, meta, sp, got.astype(jnp.int32), donate.astype(jnp.int32), k
-
-    branches = [
-        functools.partial(one_round, req, rep) for (req, rep) in schedule.rounds
-    ]
-
-    def steal_round(t, occ_stack, meta, sp):
-        return lax.switch(t % schedule.n_rounds, branches, occ_stack, meta, sp)
+        return (occ_stack, meta, sp, head, got.astype(jnp.int32),
+                donate.astype(jnp.int32), k)
 
     return steal_round

@@ -37,7 +37,13 @@ def main(argv=None):
     ap.add_argument("--steal-max", type=int, default=128)
     ap.add_argument("--stack-cap", type=int, default=0,
                     help="per-miner stack capacity (0 = auto-size)")
-    ap.add_argument("--kernel", default="ref", choices=["ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "ref", "pallas", "pallas_interpret"],
+                    help="support-count kernel (auto: pallas on TPU, "
+                         "ref elsewhere)")
+    ap.add_argument("--sync-period", type=int, default=4,
+                    help="supersteps between lambda/histogram syncs "
+                         "(staleness costs work, never results)")
     ap.add_argument("--pipeline", default="three_phase",
                     help="LAMP pipeline (an api.PIPELINES key, e.g. "
                          "three_phase | fused23)")
@@ -80,6 +86,7 @@ def main(argv=None):
             steal_max=args.steal_max,
             steal_enabled=not args.no_steal,
             kernel_impl=args.kernel,
+            sync_period=args.sync_period,
             out_cap=args.out_cap,
             # stack_cap=None: sized by RuntimeConfig.resolve for the
             # dataset's bucket and the devices actually available

@@ -135,6 +135,39 @@ def test_runtime_resolve_is_bucket_deterministic():
     assert rt.resolve(ds1.bucket, 4) == rt.resolve(ds2.bucket, 4)
 
 
+def test_kernel_impl_auto_resolves_per_backend(monkeypatch):
+    """"auto" picks the Pallas kernel on TPU and the jnp ref elsewhere."""
+    import jax
+
+    from repro.core.expand import resolve_kernel_impl
+
+    assert resolve_kernel_impl("auto", backend="tpu") == "pallas"
+    assert resolve_kernel_impl("auto", backend="cpu") == "ref"
+    assert resolve_kernel_impl("auto", backend="gpu") == "ref"
+    # explicit choices always pass through untouched
+    assert resolve_kernel_impl("pallas_interpret", backend="tpu") == "pallas_interpret"
+    assert resolve_kernel_impl("ref", backend="tpu") == "ref"
+
+    bucket = ShapeBucket(64, 16, 64)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert RuntimeConfig().resolve(bucket, 1).kernel_impl == "pallas"
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert RuntimeConfig().resolve(bucket, 1).kernel_impl == "ref"
+    # the resolved config is the cache key: "auto" never leaks into it
+    assert "auto" not in (
+        RuntimeConfig().resolve(bucket, 1).kernel_impl,
+        RuntimeConfig(kernel_impl="pallas").resolve(bucket, 1).kernel_impl,
+    )
+
+
+def test_sync_period_lands_in_resolved_config_and_cache_key():
+    bucket = ShapeBucket(64, 16, 64)
+    a = RuntimeConfig(sync_period=1).resolve(bucket, 1)
+    b = RuntimeConfig(sync_period=8).resolve(bucket, 1)
+    assert a.sync_period == 1 and b.sync_period == 8
+    assert a != b  # different cadences must never share a compiled program
+
+
 # ------------------------------------------------- warm-vs-cold equivalence
 def test_warm_query_zero_compiles_and_bit_identical_results():
     db1, l1, _ = small_problem(seed=0)

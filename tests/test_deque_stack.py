@@ -1,0 +1,192 @@
+"""Circular-deque stack (core/deque.py) vs the old shift-stack semantics.
+
+The deque refactor must be *invisible*: the same pop order at the top, the
+same donated nodes at the bottom, the same overflow behavior — only the
+physical addressing changed.  A hypothesis property test drives randomized
+push/pop/donate/receive sequences through the deque primitives and a NumPy
+oracle implementing the pre-deque shift-stack, comparing every externally
+visible value.  The engine-level companion
+(`test_engine.py::test_sync_period_equivalence`) asserts the full miner's
+results are bit-identical across `sync_period` settings.
+"""
+
+import numpy as np
+
+try:  # dev dep (requirements-dev.txt); a seeded sweep covers its absence
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.deque import (
+    advance_head,
+    bottom_indices,
+    push_positions,
+    top_indices,
+)
+
+CAP = 16
+STEAL_MAX = 5
+
+
+class ShiftStackOracle:
+    """The pre-deque semantics: slot 0 pinned to row 0, shift on donate."""
+
+    def __init__(self, cap=CAP):
+        self.buf = np.zeros(cap, np.int64)
+        self.sp = 0
+        self.cap = cap
+
+    def push(self, vals):
+        vals = vals[: self.cap - self.sp]  # tests never overflow; clamp anyway
+        self.buf[self.sp: self.sp + len(vals)] = vals
+        self.sp += len(vals)
+        return len(vals)
+
+    def pop(self, k):
+        k = min(k, self.sp)
+        out = self.buf[self.sp - k: self.sp][::-1].copy()  # top-first
+        self.sp -= k
+        return out
+
+    def donate(self, want):
+        k = min(self.sp // 2, want, STEAL_MAX)
+        out = self.buf[:k].copy()                     # bottom-k, oldest first
+        self.buf[: self.sp - k] = self.buf[k: self.sp]  # the O(cap) shift
+        self.sp -= k
+        return out
+
+    def receive(self, vals):
+        assert self.sp == 0
+        self.buf[: len(vals)] = vals
+        self.sp = len(vals)
+
+
+class DequeModel:
+    """The same operations through the core/deque.py primitives."""
+
+    def __init__(self, cap=CAP):
+        self.buf = np.zeros(cap, np.int64)
+        self.sp = 0
+        self.head = 0
+        self.cap = cap
+
+    def push(self, vals):
+        n = len(vals)
+        offsets = np.arange(n)
+        valid = np.ones(n, bool)
+        pos, overflow = push_positions(self.head, self.sp, offsets, valid, self.cap)
+        pos, overflow = np.asarray(pos), bool(overflow)
+        assert not overflow
+        self.buf[pos] = vals
+        self.sp += n
+        return n
+
+    def pop(self, k):
+        k = min(k, self.sp)
+        idx = np.asarray(top_indices(self.head, self.sp, np.arange(k), self.cap))
+        out = self.buf[idx].copy()                    # top-first by construction
+        self.sp -= k
+        return out
+
+    def donate(self, want):
+        k = min(self.sp // 2, want, STEAL_MAX)
+        src = np.asarray(bottom_indices(self.head, np.arange(k), self.cap))
+        out = self.buf[src].copy()
+        self.head = int(advance_head(self.head, k, self.cap))
+        self.sp -= k
+        return out
+
+    def receive(self, vals):
+        assert self.sp == 0
+        dst = np.asarray(bottom_indices(self.head, np.arange(len(vals)), self.cap))
+        self.buf[dst] = vals
+        self.sp = len(vals)
+
+
+def run_sequence(ops):
+    """Drive both models through one op sequence, comparing every visible
+    value: pop order, donated nodes, stack size, and full stack content."""
+    oracle, deque = ShiftStackOracle(), DequeModel()
+    next_val = 1
+    for kind, arg in ops:
+        if kind == "push":
+            # keep headroom so neither model overflows (same clamp in both)
+            arg = min(arg, CAP - oracle.sp)
+            vals = np.arange(next_val, next_val + arg)
+            next_val += arg
+            assert oracle.push(vals) == deque.push(vals)
+        elif kind == "pop":
+            np.testing.assert_array_equal(oracle.pop(arg), deque.pop(arg))
+        elif kind == "donate":
+            np.testing.assert_array_equal(oracle.donate(arg), deque.donate(arg))
+        else:  # receive: only meaningful into an empty stack (a requester)
+            if oracle.sp != 0:
+                continue
+            vals = np.arange(next_val, next_val + arg)
+            next_val += arg
+            oracle.receive(vals)
+            deque.receive(vals)
+        assert oracle.sp == deque.sp
+        # the full visible stack content agrees (bottom-first)
+        if oracle.sp:
+            got = deque.pop(deque.sp)
+            want = oracle.pop(oracle.sp)
+            np.testing.assert_array_equal(got, want)
+            oracle.receive(want[::-1].copy())
+            deque.receive(np.asarray(got)[::-1].copy())
+
+
+OP_KINDS = ("push", "pop", "donate", "receive")
+OP_MAX = {"push": 6, "pop": 6, "donate": STEAL_MAX + 2, "receive": STEAL_MAX}
+
+
+def test_deque_matches_shift_stack_oracle_seeded():
+    """Seeded random sweep — always runs, even without hypothesis."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        ops = [
+            (kind, int(rng.integers(1, OP_MAX[kind] + 1)))
+            for kind in rng.choice(OP_KINDS, size=int(rng.integers(1, 40)))
+        ]
+        run_sequence(ops)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def op_sequences(draw):
+        n_ops = draw(st.integers(1, 40))
+        return [
+            (kind, draw(st.integers(1, OP_MAX[kind])))
+            for kind in (
+                draw(st.sampled_from(OP_KINDS)) for _ in range(n_ops)
+            )
+        ]
+
+    @settings(max_examples=60, deadline=None)
+    @given(op_sequences())
+    def test_deque_matches_shift_stack_oracle(ops):
+        run_sequence(ops)
+
+
+def test_push_overflow_is_flagged_and_dropped():
+    pos, overflow = push_positions(
+        head=3, base_sp=CAP - 2, offsets=np.arange(4), valid=np.ones(4, bool),
+        cap=CAP,
+    )
+    pos = np.asarray(pos)
+    assert bool(overflow)
+    # the two in-capacity pushes land (wrapped), the rest hit the drop row
+    np.testing.assert_array_equal(pos[:2], [(3 + CAP - 2) % CAP, (3 + CAP - 1) % CAP])
+    assert (pos[2:] == CAP).all()
+
+
+def test_wrapped_addressing_round_trips():
+    d = DequeModel()
+    d.head = CAP - 2  # force wraparound
+    d.push(np.arange(1, 7))
+    np.testing.assert_array_equal(d.pop(3), [6, 5, 4])
+    np.testing.assert_array_equal(d.donate(10), [1])  # min(sp//2=1, STEAL_MAX)
+    np.testing.assert_array_equal(d.pop(2), [3, 2])
+    assert d.sp == 0

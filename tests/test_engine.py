@@ -161,6 +161,58 @@ def test_pallas_kernel_in_engine():
     np.testing.assert_array_equal(np.array(got["hist"]), want)
 
 
+@pytest.mark.parametrize("pipeline", ["three_phase", "fused23"])
+def test_sync_period_equivalence(pipeline):
+    """Lambda-sync staleness costs work, never results (DESIGN.md §6).
+
+    ResultSet (patterns incl. p/q-values), final lambda, min_sup, k, delta,
+    and every static-lambda histogram must be bit-identical across
+    sync_period settings; the lamp1 traversal may only differ in sub-lambda
+    diagnostic bins (a closed set with sup >= the final lambda survives
+    every stale pruning decision, so those bins cannot move).
+    """
+    from repro.api import AlgorithmConfig, Dataset, MinerSession, RuntimeConfig
+
+    db, labels, _ = small_problem(seed=4)
+    ds = Dataset.from_dense(db, labels, name="sync-eq")
+
+    def run(sync):
+        session = MinerSession(
+            algorithm=AlgorithmConfig(alpha=0.05, pipeline=pipeline),
+            runtime=RuntimeConfig(expand_batch=8, stack_cap=2048, steal_max=32,
+                                  push_cap=128, sync_period=sync),
+        )
+        return session.mine(ds)
+
+    def patterns(rep):
+        return sorted(
+            (tuple(p.items), p.support, p.pos_support, p.pvalue, p.qvalue)
+            for p in rep.results
+        )
+
+    ref = run(1)
+    for sync in (4, 16):
+        rep = run(sync)
+        assert rep.lambda_final == ref.lambda_final
+        assert rep.min_sup == ref.min_sup
+        assert rep.correction_factor == ref.correction_factor
+        assert rep.delta == ref.delta
+        assert rep.n_significant == ref.n_significant
+        assert patterns(rep) == patterns(ref)
+        for pr, pf in zip(rep.phases, ref.phases):
+            assert pr.mode == pf.mode
+            if pr.mode == "lamp1":
+                np.testing.assert_array_equal(
+                    pr.output.hist[rep.lambda_final:],
+                    pf.output.hist[ref.lambda_final:],
+                )
+            else:
+                np.testing.assert_array_equal(pr.output.hist, pf.output.hist)
+                if pr.output.hist2d is not None:
+                    np.testing.assert_array_equal(pr.output.hist2d,
+                                                  pf.output.hist2d)
+
+
 def test_fused_phase23_matches_three_phase():
     """Beyond-paper: 2-pass (hist2d) LAMP == the paper's 3-phase pipeline."""
     for seed in [0, 4, 7]:
