@@ -28,7 +28,10 @@ The `repeated_query` section drives one `repro.api.MinerSession` with
 reseeded same-bucket queries: the first is cold (compiles one program per
 phase), the rest replay warm compiled programs — `cold_over_warm` is the
 latency win the session API exists for, and `compiles` must equal the phase
-count.
+count.  The `per_statistic` section records warm full-query latency for
+each registered test statistic (fisher, chi2) against one shared session,
+asserting that the second statistic compiles only its own emission-test
+program (lamp1/count are statistic-free and stay warm).
 
 The committed BENCH_mining.json is the perf trajectory's anchor: later perf
 PRs rerun this entry point and compare against it (`--compare` prints the
@@ -224,6 +227,49 @@ def bench_repeated_queries(name: str, scales: dict, n_queries: int = 6) -> dict:
     }
 
 
+def bench_per_statistic(name: str, scales: dict, n_queries: int = 4) -> dict:
+    """Warm full-query latency per registered statistic, ONE shared session.
+
+    Runs fisher then chi2 significant-pattern queries against the same
+    `MinerSession`: the first fisher query compiles one program per phase;
+    the first chi2 query compiles only its own emission-test program (the
+    lamp1/count programs are statistic-free and stay warm — `extra_compiles`
+    records exactly that), and every later query is a zero-trace dispatch.
+    `warm_mean_s` per statistic is the serving-latency number the query
+    layer exists for.
+    """
+    from repro.api import (
+        Dataset, MinerSession, RuntimeConfig, SignificantPatternQuery,
+    )
+
+    session = MinerSession(runtime=RuntimeConfig(expand_batch=16))
+    out = {}
+    misses_before = 0
+    for stat in ("fisher", "chi2"):
+        query = SignificantPatternQuery(alpha=0.05, statistic=stat)
+        lat = []
+        for q in range(n_queries):
+            ds = Dataset.from_paper_problem(
+                name, scales["scale_items"], scales["scale_trans"], seed=q
+            )
+            t0 = time.time()
+            session.run(ds, query)
+            lat.append(time.time() - t0)
+        ci = session.cache_info()
+        warm = lat[1:]
+        out[stat] = {
+            "queries": n_queries,
+            "first_s": round(lat[0], 4),
+            "warm_mean_s": round(sum(warm) / len(warm), 4),
+            "warm_max_s": round(max(warm), 4),
+            "extra_compiles": ci.misses - misses_before,
+        }
+        misses_before = ci.misses
+    assert out["fisher"]["extra_compiles"] == 3, "phase programs compile once"
+    assert out["chi2"]["extra_compiles"] == 1, "chi2 reuses warm lamp1/count"
+    return {"problem": name, "statistics": out}
+
+
 def compare_markdown(old: dict, new: dict) -> str:
     """Old-vs-new warm wall table (markdown; CI appends to the job summary)."""
     lines = [
@@ -247,6 +293,12 @@ def compare_markdown(old: dict, new: dict) -> str:
     if rq_new:
         ratio = f"{rq_old / rq_new:.2f}x" if rq_old else "n/a"
         lines.append(f"| repeated_query warm_mean | - | {rq_old} | {rq_new} | {ratio} |")
+    for stat, row in new.get("per_statistic", {}).get("statistics", {}).items():
+        s_old = (old.get("per_statistic", {}).get("statistics", {})
+                 .get(stat, {}).get("warm_mean_s"))
+        s_new = row.get("warm_mean_s")
+        ratio = f"{s_old / s_new:.2f}x" if s_old and s_new else "n/a"
+        lines.append(f"| stat={stat} warm_mean | - | {s_old} | {s_new} | {ratio} |")
     bd = next(iter(new.get("problems", [])), {}).get("superstep_breakdown")
     if bd:
         lines += [
@@ -270,6 +322,7 @@ def run(problems: dict, p_values=(1, 2, 4, 8), out_path: str = DEFAULT_OUT) -> d
         "host_devices": len(jax.devices()),
         "problems": [bench_problem(n, s, p_values) for n, s in problems.items()],
         "repeated_query": bench_repeated_queries(rq_name, problems[rq_name]),
+        "per_statistic": bench_per_statistic(rq_name, problems[rq_name]),
         "total_wall_s": None,
     }
     payload["total_wall_s"] = round(time.time() - t0, 3)

@@ -4,8 +4,10 @@
   PYTHONPATH=src python examples/gwas_mining.py [--devices 8]
 
 Demonstrates: the three LAMP phases on a Table-1-matched problem via a
-compile-once `MinerSession`, the mined itemsets printed with SNP names,
-the GLB vs naive comparison, and a warm repeat query with zero recompiles.
+compile-once `MinerSession` driven by first-class `Query` objects, the
+mined itemsets printed with SNP names, a chi-square query reusing the warm
+lamp1/count programs (only the statistic's own test program compiles), the
+GLB vs naive comparison, and a warm repeat query with zero recompiles.
 """
 
 import argparse
@@ -21,7 +23,9 @@ def main():
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
     )
 
-    from repro.api import Dataset, MinerSession, RuntimeConfig
+    from repro.api import (
+        Dataset, MinerSession, RuntimeConfig, SignificantPatternQuery,
+    )
 
     ds = Dataset.from_paper_problem("hapmap_dom_10", 0.05, 1.0)
     spec = ds.spec
@@ -30,12 +34,23 @@ def main():
 
     session = MinerSession(runtime=RuntimeConfig(expand_batch=16, trace_cap=8192))
     t0 = time.time()
-    report = session.mine(ds)
+    report = session.run(ds, SignificantPatternQuery(alpha=0.05))
     print(f"\nthree-phase LAMP in {time.time()-t0:.1f}s: "
           f"lambda={report.lambda_final} min_sup={report.min_sup} "
           f"k={report.correction_factor} significant={report.n_significant}")
 
     print("\n" + report.results.describe(10, planted=ds.planted))
+
+    # same engine, different test: the chi-square query shares the session's
+    # warm lamp1/count programs — only its own emission test compiles
+    before = session.cache_info()
+    rep_chi2 = session.run(ds, SignificantPatternQuery(alpha=0.05,
+                                                       statistic="chi2"))
+    extra = session.cache_info().misses - before.misses
+    print(f"\nchi2 query on the same session: "
+          f"significant={rep_chi2.n_significant} "
+          f"({extra} new compile{'s' if extra != 1 else ''} — "
+          f"lamp1/count programs are statistic-free and stay warm)")
 
     p2 = report.phases[1]
     work = p2.stats["popped"]
@@ -56,7 +71,7 @@ def main():
     # warm repeat: a fresh same-shape dataset reuses every compiled program
     ds2 = Dataset.from_paper_problem("hapmap_dom_10", 0.05, 1.0, seed=1)
     before = session.cache_info()
-    rep2 = session.mine(ds2)
+    rep2 = session.run(ds2, SignificantPatternQuery(alpha=0.05))
     assert session.cache_info().misses == before.misses
     print(f"\nwarm repeat query ({ds2.name} reseeded): {rep2.wall_s:.2f}s vs "
           f"cold {report.wall_s:.2f}s, zero new compiles")

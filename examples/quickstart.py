@@ -5,11 +5,17 @@ matrix — sequential oracle vs the session-based distributed BSP engine, in
   PYTHONPATH=src python examples/quickstart.py
 
 Shows the canonical API (repro.api): a `Dataset` packed once, a
-`MinerSession` whose compiled programs are cached, a typed `MineReport`,
-and a second (warm) query that reuses every compiled program.
+`MinerSession` whose compiled programs are cached, first-class `Query`
+objects executed via `session.run(...)` (a typed `MineReport` each), and a
+second (warm) query that reuses every compiled program.
 """
 
-from repro.api import Dataset, MinerSession, RuntimeConfig
+from repro.api import (
+    Dataset,
+    MinerSession,
+    RuntimeConfig,
+    SignificantPatternQuery,
+)
 from repro.core.lamp import lamp
 from repro.data.synthetic import SyntheticSpec, generate
 from repro.results import score_planted
@@ -39,7 +45,11 @@ def main():
         db, labels, name="demo",
         item_names=[f"snp{j:05d}" for j in range(spec.n_items)],
     )
-    report = session.mine(ds)   # cold: compiles one program per phase
+    # session.run(dataset, query): the query object IS the objective —
+    # swap statistic="chi2", or a ClosedFrequentQuery/TopKSignificantQuery,
+    # without touching the engine (session.mine(ds) builds this same query)
+    query = SignificantPatternQuery(alpha=0.05, statistic="fisher")
+    report = session.run(ds, query)   # cold: compiles one program per phase
     print(f"\n[engine]     lambda={report.lambda_final} min_sup={report.min_sup} "
           f"closed@min_sup={report.correction_factor} delta={report.delta:.2e} "
           f"significant={report.n_significant}")
@@ -66,7 +76,7 @@ def main():
         n_planted=2, planted_pos_rate=0.7, planted_neg_rate=0.03, seed=2,
     ))
     before = session.cache_info()
-    report2 = session.mine(Dataset.from_dense(db2, labels2, name="demo2"))
+    report2 = session.run(Dataset.from_dense(db2, labels2, name="demo2"), query)
     after = session.cache_info()
     assert after.misses == before.misses, "warm query must not recompile"
     print(f"warm repeat query: {report2.wall_s:.3f}s vs cold "

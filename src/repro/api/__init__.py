@@ -1,21 +1,27 @@
-"""repro.api — the canonical public mining surface (DESIGN.md §5).
+"""repro.api — the canonical public mining surface (DESIGN.md §5, §7).
 
-    from repro.api import Dataset, MinerSession
+    from repro.api import Dataset, MinerSession, SignificantPatternQuery
 
     session = MinerSession()                      # mesh + program cache
     ds = Dataset.from_paper_problem("hapmap_dom_10", 0.02)   # packed once
-    report = session.mine(ds)                     # cold: compiles per phase
-    report = session.mine(ds)                     # warm: zero re-compiles
+    report = session.run(ds, SignificantPatternQuery(alpha=0.05))
+    report = session.run(ds, SignificantPatternQuery(statistic="chi2"))
+    report = session.run(ds, ClosedFrequentQuery(min_sup=50, top_k=10))
+    report = session.run(ds, TopKSignificantQuery(k=10))
     print(report.summary())
     print(report.results.describe(10))
     print(session.cache_info())
 
 `Dataset` packs the occurrence bitmap once and pads to a shape bucket;
+`Query` objects (query.py) are the mining objectives — significant
+patterns under any registered `repro.stats` statistic, closed-frequent
+enumeration, alpha-free top-k — all executed by one engine;
 `MinerSession` caches compiled BSP programs by (mode, bucket, runtime
-config) so phases, repeat queries, and same-bucket datasets all share them;
-`MineReport`/`PhaseReport` are the typed answers.  The legacy
-`repro.core.engine.lamp_distributed` dict API remains as a deprecation shim
-over this package.
+config, statistic) with LRU bounding so phases, repeat queries, and
+same-bucket datasets all share them; `MineReport`/`PhaseReport` are the
+typed answers.  `session.mine(...)` remains as a thin wrapper that builds
+a `SignificantPatternQuery`; the legacy `repro.core.engine.lamp_distributed`
+dict API remains as a deprecation shim over this package.
 """
 
 from .config import AlgorithmConfig, RuntimeConfig
@@ -26,6 +32,13 @@ from .dataset import (
     Dataset,
     ShapeBucket,
 )
+from .query import (
+    QUERIES,
+    ClosedFrequentQuery,
+    Query,
+    SignificantPatternQuery,
+    TopKSignificantQuery,
+)
 from .report import MineReport, PhaseReport
 from .session import PIPELINES, CacheInfo, MinerSession, ProgramInfo
 
@@ -33,6 +46,7 @@ __all__ = [
     "AlgorithmConfig",
     "BucketPolicy",
     "CacheInfo",
+    "ClosedFrequentQuery",
     "Dataset",
     "DEFAULT_BUCKETS",
     "EXACT_BUCKETS",
@@ -41,6 +55,10 @@ __all__ = [
     "PhaseReport",
     "PIPELINES",
     "ProgramInfo",
+    "QUERIES",
+    "Query",
     "RuntimeConfig",
     "ShapeBucket",
+    "SignificantPatternQuery",
+    "TopKSignificantQuery",
 ]

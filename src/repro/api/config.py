@@ -38,9 +38,10 @@ __all__ = ["AlgorithmConfig", "RuntimeConfig"]
 
 @dataclass(frozen=True)
 class AlgorithmConfig:
-    """What to compute: significance level and phase staging."""
+    """What to compute: test statistic, significance level, phase staging."""
 
     alpha: float = 0.05          # family-wise error rate target
+    statistic: str = "fisher"    # repro.stats registry key: "fisher" | "chi2"
     pipeline: str = "three_phase"  # PIPELINES key: "three_phase" | "fused23"
     min_sup_floor: int = 1       # lower bound on the lambda-derived min_sup
 
@@ -63,6 +64,12 @@ class RuntimeConfig:
     trace_cap: int = 0
     sync_period: int = 4           # supersteps between lambda/histogram syncs
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
+    # session-level knob (NOT part of any compiled program, so it never
+    # reaches the resolved EngineConfig cache key): max compiled programs a
+    # MinerSession retains before LRU eviction.  Long-lived serving
+    # processes cycling many (mode, bucket, statistic) combinations stay
+    # bounded; evictions are counted in CacheInfo.
+    max_programs: int = 64
 
     @classmethod
     def from_engine_config(cls, cfg: EngineConfig) -> "RuntimeConfig":

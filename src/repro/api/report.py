@@ -42,19 +42,26 @@ class PhaseReport:
 
 @dataclass(frozen=True)
 class MineReport:
-    """The answer to one significant-pattern query."""
+    """The answer to one mining query.
+
+    Significant-pattern queries fill every field; other objectives leave
+    the LAMP quantities that don't apply to them as NaN (alpha/delta) or
+    their trivial values, and tag themselves via `query`/`statistic`.
+    """
 
     dataset: str               # Dataset.name
-    pipeline: str              # "three_phase" | "fused23"
-    alpha: float
+    pipeline: str              # "three_phase" | "fused23" | objective tag
+    alpha: float               # NaN for alpha-free objectives
     lambda_final: int
     min_sup: int
     correction_factor: int     # k: number of testable (closed) patterns
-    delta: float               # alpha / k, the corrected level
+    delta: float               # alpha / k, the corrected level (NaN if unused)
     n_significant: int
     results: ResultSet         # the mined patterns themselves
     phases: tuple[PhaseReport, ...]
     wall_s: float              # full query wall time
+    statistic: str | None = "fisher"  # repro.stats key; None = untested
+    query: str = "significant"        # objective tag (api.query.QUERIES key)
 
     @property
     def cold(self) -> bool:
@@ -62,13 +69,22 @@ class MineReport:
         return any(not p.cache_hit for p in self.phases)
 
     def summary(self) -> str:
+        import math
+
         tag = "cold" if self.cold else "warm"
-        return (
-            f"{self.dataset}[{self.pipeline}] lambda={self.lambda_final} "
-            f"min_sup={self.min_sup} k={self.correction_factor} "
-            f"delta={self.delta:.3e} significant={self.n_significant} "
-            f"({self.wall_s:.3f}s {tag})"
-        )
+        if self.query == "closed-frequent":
+            head = (f"{self.dataset}[closed-frequent] min_sup={self.min_sup} "
+                    f"closed={self.n_significant}")
+        else:
+            stat = f" stat={self.statistic}" if self.statistic != "fisher" else ""
+            delta = "n/a" if math.isnan(self.delta) else f"{self.delta:.3e}"
+            head = (
+                f"{self.dataset}[{self.pipeline}]{stat} "
+                f"lambda={self.lambda_final} min_sup={self.min_sup} "
+                f"k={self.correction_factor} delta={delta} "
+                f"significant={self.n_significant}"
+            )
+        return f"{head} ({self.wall_s:.3f}s {tag})"
 
     def to_legacy_dict(self) -> dict:
         """The documented `lamp_distributed` return dict, exactly."""

@@ -1,33 +1,42 @@
-"""MinerSession — compile-once, query-many significant-pattern mining.
+"""MinerSession — compile-once, query-many pattern mining.
 
 The paper's deliverable is a miner that answers queries at scale; the
 deployment mode that matters is *repeated* queries.  A session owns the
-device mesh and a cache of AOT-compiled BSP programs keyed by
+device mesh and a bounded LRU cache of AOT-compiled BSP programs keyed by
 
-    (mode, shape bucket, resolved RuntimeConfig)
+    (mode, shape bucket, resolved RuntimeConfig, statistic)
 
 — everything the compiled artifact actually depends on (resolution makes
 the key concrete: `kernel_impl="auto"` becomes the backend's kernel and
 `sync_period` — the lambda-sync cadence baked into the superstep program —
-rides along, so different cadences never collide in the cache).  Statistical
-parameters (alpha / min_sup / delta) and the dataset's exact dims enter the
-program as runtime arguments, so:
+rides along).  The statistic component is the registered test whose device
+P-value is *traced into* the emission gate of modes "test"/"count2d", so
+fisher and chi2 programs never collide; modes "lamp1"/"count" never trace
+a statistic (its Tarone thresholds are runtime data) and key it as None,
+so every statistic shares their programs.  Statistical parameters
+(alpha / min_sup / delta) and the dataset's exact dims enter the program
+as runtime arguments, so:
 
   * phase 2 ("count") and phase 3 ("test"/"count2d") of one query never
     re-trace what phase 1 already traced for a different mode only once each;
   * a repeat query — same dataset, or any dataset in the same bucket —
     replays fully warm programs with **zero** new traces or compiles;
-  * `cache_info()` exposes hits/misses and per-program lowering stats
-    (compile seconds, cost analysis) for inspection and tests.
+  * `cache_info()` exposes hits/misses/evictions and per-program lowering
+    stats (compile seconds, cost analysis) for inspection and tests.
 
-Pipelines (`PIPELINES`: "three_phase" | "fused23") are functions over a
-session, not free functions that re-enter `mine()` from scratch — they
-share the session's packed dataset and warm programs across phases.
+Queries are first-class objects (repro.api.query): `run(dataset, query)`
+executes any registered objective — SignificantPatternQuery (the classic
+LAMP staging, any statistic), ClosedFrequentQuery, TopKSignificantQuery —
+and `mine(...)` survives as a thin wrapper that builds a
+SignificantPatternQuery from the session's AlgorithmConfig.  The LAMP
+stagings themselves (`PIPELINES`: "three_phase" | "fused23") are functions
+over a session, sharing its packed dataset and warm programs across phases.
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable
 
@@ -37,20 +46,26 @@ import jax
 
 from repro.core import collectives
 from repro.core.engine import (
+    VALID_MODES,
     EngineConfig,
     MineOutput,
     build_phase_program,
     make_phase_args,
     postprocess_phase,
 )
-from repro.core.fisher import fisher_pvalue
 from repro.core.lifeline import build_schedule
+from repro.stats import get_statistic
 
 from .config import AlgorithmConfig, RuntimeConfig
 from .dataset import Dataset, ShapeBucket
+from .query import Query, SignificantPatternQuery
 from .report import MineReport, PhaseReport
 
 __all__ = ["CacheInfo", "MinerSession", "PIPELINES", "ProgramInfo"]
+
+#: sentinel distinguishing "argument omitted" from an explicit None —
+#: statistic=None elsewhere means "no test", which mine() must reject
+_USE_SESSION_DEFAULT = "<session-default>"
 
 
 @dataclass(frozen=True)
@@ -62,6 +77,7 @@ class ProgramInfo:
     compile_s: float
     calls: int
     flops: float | None    # XLA cost analysis, when the backend reports it
+    statistic: str | None = None  # traced emission test ("test"/"count2d" only)
 
 
 @dataclass(frozen=True)
@@ -71,6 +87,7 @@ class CacheInfo:
     hits: int
     misses: int
     programs: tuple[ProgramInfo, ...]
+    evictions: int = 0   # programs dropped by the max_programs LRU bound
 
     @property
     def n_programs(self) -> int:
@@ -78,10 +95,12 @@ class CacheInfo:
 
     def __str__(self) -> str:
         lines = [f"cache: {self.hits} hits / {self.misses} misses, "
-                 f"{self.n_programs} compiled programs"]
+                 f"{self.n_programs} compiled programs"
+                 + (f", {self.evictions} evicted" if self.evictions else "")]
         for p in self.programs:
+            stat = f" stat={p.statistic}" if p.statistic is not None else ""
             lines.append(
-                f"  [{p.mode:8s}] bucket=({p.bucket.transactions}, "
+                f"  [{p.mode:8s}]{stat} bucket=({p.bucket.transactions}, "
                 f"{p.bucket.positives}, {p.bucket.items}) "
                 f"compile={p.compile_s:.2f}s calls={p.calls}"
                 + (f" flops={p.flops:.3g}" if p.flops is not None else "")
@@ -114,10 +133,18 @@ class MinerSession:
         self.mesh = collectives.make_miner_mesh(self.devices)
         self.algorithm = algorithm or AlgorithmConfig()
         self.runtime = runtime or RuntimeConfig()
-        self._programs: dict[tuple, _Program] = {}
+        if self.runtime.max_programs < 1:
+            raise ValueError(
+                f"RuntimeConfig.max_programs must be >= 1, got "
+                f"{self.runtime.max_programs} (the session needs room for at "
+                "least the program it is about to run)"
+            )
+        # insertion/use-ordered: front = least recently used (LRU eviction)
+        self._programs: OrderedDict[tuple, _Program] = OrderedDict()
         self._schedules: dict[tuple[int, int], object] = {}
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
 
     # -------------------------------------------------------------- programs
     def _schedule(self, cfg: EngineConfig):
@@ -126,17 +153,20 @@ class MinerSession:
             self._schedules[key] = build_schedule(self.n_devices, *key)
         return self._schedules[key]
 
-    def _program(self, mode: str, bucket: ShapeBucket, cfg: EngineConfig, args):
-        """Fetch-or-compile the phase program for (mode, bucket, cfg)."""
-        key = (mode, bucket, cfg)
+    def _program(self, mode: str, bucket: ShapeBucket, cfg: EngineConfig,
+                 statistic: str | None, args):
+        """Fetch-or-compile the phase program for (mode, bucket, cfg, stat)."""
+        key = (mode, bucket, cfg, statistic)
         entry = self._programs.get(key)
         if entry is not None:
             self._hits += 1
+            self._programs.move_to_end(key)  # most recently used
             return entry, True
         self._misses += 1
         shardy = build_phase_program(
             (bucket.transactions, bucket.positives, bucket.items),
             cfg=cfg, schedule=self._schedule(cfg), mesh=self.mesh, mode=mode,
+            statistic=statistic,
         )
         t0 = time.perf_counter()
         compiled = jax.jit(shardy).lower(*args).compile()
@@ -148,18 +178,32 @@ class MinerSession:
             flops = None
         entry = _Program(compiled, compile_s, flops)
         self._programs[key] = entry
+        while len(self._programs) > self.runtime.max_programs:
+            self._programs.popitem(last=False)  # evict least recently used
+            self._evictions += 1
         return entry, False
 
     def cache_info(self) -> CacheInfo:
         return CacheInfo(
             hits=self._hits,
             misses=self._misses,
+            evictions=self._evictions,
             programs=tuple(
                 ProgramInfo(mode=key[0], bucket=key[1], compile_s=p.compile_s,
-                            calls=p.calls, flops=p.flops)
+                            calls=p.calls, flops=p.flops, statistic=key[3])
                 for key, p in self._programs.items()
             ),
         )
+
+    def clear_cache(self) -> int:
+        """Drop every cached compiled program; returns how many were held.
+
+        Hit/miss/eviction counters are preserved (a clear is not an LRU
+        eviction); the next query of any (mode, bucket, statistic) recompiles.
+        """
+        n = len(self._programs)
+        self._programs.clear()
+        return n
 
     # ---------------------------------------------------------------- phases
     def run_phase(
@@ -170,21 +214,39 @@ class MinerSession:
         min_sup: int = 1,
         delta: float = 0.0,
         alpha: float | None = None,
+        statistic: str | None = "fisher",
     ) -> PhaseReport:
-        """One engine pass on a warm (or newly compiled) program."""
-        assert mode in ("lamp1", "count", "test", "count2d")
+        """One engine pass on a warm (or newly compiled) program.
+
+        `statistic` names the registered test gating emission in modes
+        "test"/"count2d" (None emits every counted closed set — the
+        closed-frequent objective); modes "lamp1"/"count" use it only for
+        the host-built Tarone threshold table, so their compiled programs
+        are shared across statistics.
+        """
+        if mode not in VALID_MODES:
+            raise ValueError(
+                f"unknown engine mode {mode!r}; valid modes: "
+                f"{', '.join(VALID_MODES)}"
+            )
+        if statistic is not None:
+            get_statistic(statistic)  # actionable ValueError on typos
         t0 = time.perf_counter()
         alpha = self.algorithm.alpha if alpha is None else alpha
         cfg = self.runtime.resolve(dataset.bucket, self.n_devices)
         args, ctx = make_phase_args(
             dataset.packed, n_proc=self.n_devices, cfg=cfg, mode=mode,
-            alpha=alpha, min_sup=min_sup, delta=delta,
+            alpha=alpha, min_sup=min_sup, delta=delta, statistic=statistic,
         )
-        entry, hit = self._program(mode, dataset.bucket, cfg, args)
+        # the statistic is traced only into the emission gate; lamp1/count
+        # programs are statistic-free and shared under the None key
+        stat_key = statistic if mode in ("test", "count2d") else None
+        entry, hit = self._program(mode, dataset.bucket, cfg, stat_key, args)
         raw = entry.compiled(*args)
         out = postprocess_phase(
             raw, packed=dataset.packed, n_proc=self.n_devices, cfg=cfg,
             mode=mode, thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
+            statistic=statistic,
         )
         entry.calls += 1
         return PhaseReport(
@@ -204,58 +266,127 @@ class MinerSession:
         )
 
     # --------------------------------------------------------------- queries
+    def run(self, dataset: Dataset, query: Query) -> MineReport:
+        """Execute one first-class query object (repro.api.query)."""
+        if not isinstance(query, Query):
+            raise TypeError(
+                f"run() takes a repro.api.Query (e.g. "
+                f"SignificantPatternQuery(alpha=0.05)), got {type(query).__name__}"
+            )
+        return query.run(self, dataset)
+
     def mine(
         self,
         dataset: Dataset,
         *,
         alpha: float | None = None,
         pipeline: str | None = None,
+        statistic: str = _USE_SESSION_DEFAULT,
     ) -> MineReport:
-        """Answer one significant-pattern query (full LAMP staging)."""
-        pipeline = self.algorithm.pipeline if pipeline is None else pipeline
-        try:
-            run = PIPELINES[pipeline]
-        except KeyError:
+        """Answer one significant-pattern query (full LAMP staging).
+
+        Thin wrapper: builds a `SignificantPatternQuery` from the session's
+        AlgorithmConfig defaults and runs it.  Unlike `run_phase`, an
+        explicit `statistic=None` is rejected here — an untested
+        enumeration is a different objective (`ClosedFrequentQuery`), not a
+        significance query with the default test.
+        """
+        if statistic is None:
             raise ValueError(
-                f"unknown pipeline {pipeline!r}; available: {sorted(PIPELINES)}"
-            ) from None
-        return run(self, dataset, self.algorithm.alpha if alpha is None else alpha)
+                "mine(statistic=None) is ambiguous: significance mining "
+                "needs a registered statistic (omit the argument for the "
+                "session default); for an untested closed-frequent "
+                "enumeration use run(dataset, ClosedFrequentQuery(min_sup=...))"
+            )
+        query = SignificantPatternQuery(
+            alpha=self.algorithm.alpha if alpha is None else alpha,
+            statistic=(self.algorithm.statistic
+                       if statistic is _USE_SESSION_DEFAULT else statistic),
+            pipeline=self.algorithm.pipeline if pipeline is None else pipeline,
+        )
+        return self.run(dataset, query)
 
     def _build_results(self, dataset: Dataset, phase_out: MineOutput, *,
-                       alpha, min_sup, k, delta, filter_host):
-        """Emitted records of one phase output -> ResultSet (repro.results)."""
+                       alpha, min_sup, k, delta, filter_host,
+                       statistic: str | None = "fisher", records=None):
+        """Emitted records of one phase output -> ResultSet (repro.results).
+
+        `records=(occ, sup, pos_sup)` overrides the phase output's emitted
+        arrays (used to append host-side records, e.g. the root closed set).
+        """
         from repro.results import build_result_set
 
+        occ, sup, pos_sup = (
+            (phase_out.sig_occ, phase_out.sig_sup, phase_out.sig_pos_sup)
+            if records is None else records
+        )
         # the dataset was packed exactly once; reconstruction reuses its bits
         return build_result_set(
-            phase_out.sig_occ, phase_out.sig_sup, phase_out.sig_pos_sup,
+            occ, sup, pos_sup,
             dataset.packed.db_bits,
             n=dataset.n_transactions, n_pos=dataset.n_pos, alpha=alpha,
             min_sup=min_sup, correction_factor=k, delta=delta,
             filter_host=filter_host, dropped=phase_out.emit_dropped,
-            item_names=dataset.item_names,
+            item_names=dataset.item_names, statistic=statistic,
+        )
+
+    def _root_record(self, dataset: Dataset, phase_out: MineOutput,
+                     statistic: str | None, delta: float, min_sup: int):
+        """Emitted records + the root closed set, when the run counts it.
+
+        The root never transits the device buffers; `postprocess_phase`
+        counts it host-side (same support guard, same test), so the pattern
+        list must append it under *exactly* the same conditions or
+        n_significant and len(results) disagree: root support n >= min_sup,
+        and — for a testing run — labels present with the statistic's root
+        P-value <= delta (Fisher's is exactly 1 and never fires; chi2's is
+        0.5, reachable when delta >= 0.5, i.e. alpha near 1 with k == 1).
+        statistic=None is the closed-frequent objective: the support guard
+        alone decides, labels optional.  Returns None (caller keeps the
+        device records as-is) when the root does not qualify.
+        """
+        n, n_pos = dataset.n_transactions, dataset.n_pos
+        if n < min_sup:
+            return None  # postprocess's root_sup >= start_sup guard
+        if statistic is not None:
+            if dataset.labels is None or float(
+                get_statistic(statistic).pvalue(n, n_pos, n, n_pos)[0]
+            ) > delta:
+                return None
+        return (
+            np.concatenate([phase_out.sig_occ,
+                            dataset.packed.occ0[None, :]], axis=0),
+            np.concatenate([phase_out.sig_sup, [n]]),
+            np.concatenate([phase_out.sig_pos_sup,
+                            [n_pos if dataset.labels is not None else 0]]),
         )
 
 
 # -------------------------------------------------------------- pipelines
 def _pipeline_three_phase(session: MinerSession, dataset: Dataset,
-                          alpha: float) -> MineReport:
+                          query: SignificantPatternQuery) -> MineReport:
     """The paper's §3.3 staging: lamp1 -> count -> test (three traversals)."""
     t0 = time.perf_counter()
-    ph1 = session.run_phase(dataset, "lamp1", alpha=alpha)
+    alpha, statistic = query.alpha, query.statistic
+    ph1 = session.run_phase(dataset, "lamp1", alpha=alpha, statistic=statistic)
     min_sup = max(ph1.lam_final - 1, session.algorithm.min_sup_floor)
 
     # phase 2: exact closed-set count at min_sup
-    ph2 = session.run_phase(dataset, "count", min_sup=min_sup, alpha=alpha)
+    ph2 = session.run_phase(dataset, "count", min_sup=min_sup, alpha=alpha,
+                            statistic=statistic)
     k = int(ph2.output.hist[min_sup:].sum())
     delta = alpha / max(k, 1)
     # phase 3: significance testing at delta
     ph3 = session.run_phase(dataset, "test", min_sup=min_sup, delta=delta,
-                            alpha=alpha)
+                            alpha=alpha, statistic=statistic)
     # the device already filtered at delta; reconstruct + exact stats only
+    # (the root closed set is appended iff the statistic counts it — it is
+    # in ph3's n_sig exactly when significant, so list and count agree)
     results = session._build_results(
         dataset, ph3.output, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
-        filter_host=False,
+        filter_host=False, statistic=statistic,
+        records=session._root_record(dataset, ph3.output, statistic, delta,
+                                     min_sup),
     )
     return MineReport(
         dataset=dataset.name,
@@ -269,40 +400,47 @@ def _pipeline_three_phase(session: MinerSession, dataset: Dataset,
         results=results,
         phases=(ph1, ph2, ph3),
         wall_s=time.perf_counter() - t0,
+        statistic=statistic,
     )
 
 
 def _pipeline_fused23(session: MinerSession, dataset: Dataset,
-                      alpha: float) -> MineReport:
+                      query: SignificantPatternQuery) -> MineReport:
     """Beyond-paper: lamp1 -> count2d, two traversals.
 
     One enumeration pass builds a 2-D (support x pos-support) histogram;
-    P-values depend only on that pair, so the correction factor AND the
-    significant count both fall out of the histogram — the third engine pass
+    P-values depend only on that pair — true of every margin-determined
+    statistic (fisher, chi2) — so the correction factor AND the significant
+    count both fall out of the histogram — the third engine pass
     disappears entirely.  The same pass emits alpha-level pattern records
     (delta <= alpha always), which the host filters down to the exact final
     delta, so pattern identities survive the fusion too (DESIGN.md §4).
     """
     t0 = time.perf_counter()
-    ph1 = session.run_phase(dataset, "lamp1", alpha=alpha)
+    alpha, statistic = query.alpha, query.statistic
+    stat = get_statistic(statistic)
+    ph1 = session.run_phase(dataset, "lamp1", alpha=alpha, statistic=statistic)
     min_sup = max(ph1.lam_final - 1, session.algorithm.min_sup_floor)
 
     n, n_pos = dataset.n_transactions, dataset.n_pos
     ph2 = session.run_phase(dataset, "count2d", min_sup=min_sup, delta=alpha,
-                            alpha=alpha)
+                            alpha=alpha, statistic=statistic)
     h2 = ph2.output.hist2d
     sups_grid = np.arange(n + 1)
     mask = (h2 > 0) & (sups_grid[:, None] >= min_sup)
     k = int(h2[mask].sum())
     delta = alpha / max(k, 1)
     xs, ns = np.nonzero(mask)
-    pv = fisher_pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
+    pv = stat.pvalue(xs, ns, n, n_pos) if len(xs) else np.zeros(0)
     sig_mask = pv <= delta
     n_sig = int(h2[xs[sig_mask], ns[sig_mask]].sum()) if len(xs) else 0
     # records were emitted at the alpha superset level; exact-filter at delta
+    # (root appended iff significant — the 2-D histogram counted it then)
     results = session._build_results(
         dataset, ph2.output, alpha=alpha, min_sup=min_sup, k=k, delta=delta,
-        filter_host=True,
+        filter_host=True, statistic=statistic,
+        records=session._root_record(dataset, ph2.output, statistic, delta,
+                                     min_sup),
     )
     return MineReport(
         dataset=dataset.name,
@@ -316,12 +454,16 @@ def _pipeline_fused23(session: MinerSession, dataset: Dataset,
         results=results,
         phases=(ph1, ph2),
         wall_s=time.perf_counter() - t0,
+        statistic=statistic,
     )
 
 
-#: First-class LAMP pipeline registry — select with
-#: `MinerSession.mine(ds, pipeline=<name>)`; extend by registering here.
-PIPELINES: dict[str, Callable[[MinerSession, Dataset, float], MineReport]] = {
+#: First-class LAMP staging registry — selected by
+#: `SignificantPatternQuery.pipeline` (and `MinerSession.mine(pipeline=...)`);
+#: extend by registering a `(session, dataset, query) -> MineReport` here.
+PIPELINES: dict[
+    str, Callable[[MinerSession, Dataset, SignificantPatternQuery], MineReport]
+] = {
     "three_phase": _pipeline_three_phase,
     "fused23": _pipeline_fused23,
 }

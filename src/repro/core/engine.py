@@ -40,6 +40,13 @@ Modes:
   count2d static min_sup (+delta=alpha)       -> 2-D (sup x pos-sup) histogram
                                                  + alpha-level pattern records
 
+The hypothesis test is pluggable (`statistic`, a repro.stats registry name):
+modes "test"/"count2d" trace the statistic's device P-value into their
+emission gate (distinct compiled programs per statistic; statistic=None
+emits every counted closed set — the closed-frequent objective), while
+"lamp1"/"count" consume it only as the host-built Tarone threshold table
+(runtime data — their programs are statistic-free).
+
 Pattern records (modes "test"/"count2d", DESIGN.md §4): each significant node
 appends (occ [W]u32, core, sup, pos_sup) to a fixed out_cap buffer — the same
 dense payload shape as stack nodes — and repro.results reconstructs the
@@ -70,11 +77,12 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.stats import get_statistic
+
 from . import collectives
 from .bitmap import full_occ, num_words, pack_db, supports_np
 from .collectives import MINERS_AXIS
 from .expand import build_expand
-from .fisher import lamp_count_thresholds
 from .global_sync import build_global_sync, hunger_census, recompute_lambda
 from .lifeline import LifelineSchedule, build_schedule
 from .stats import STAT_NAMES, Stat
@@ -83,6 +91,9 @@ from .steal import build_steal_round
 INT_MAX = np.int32(2**31 - 1)
 
 _NSTAT = len(STAT_NAMES)
+
+#: the engine's pass modes (see module docstring); anything else is a typo
+VALID_MODES = ("lamp1", "count", "test", "count2d")
 
 
 @dataclass(frozen=True)
@@ -119,8 +130,18 @@ class MineOutput:
     db_bits: np.ndarray | None = None  # [M, W]u32 packed DB (reused downstream)
 
 
-def _thresholds_int(n: int, n_pos: int, alpha: float) -> np.ndarray:
-    thr = lamp_count_thresholds(n, n_pos, alpha)
+def _thresholds_int(
+    n: int, n_pos: int, alpha: float, statistic: str | None = "fisher"
+) -> np.ndarray:
+    """Integer Tarone support-increase table for the named statistic.
+
+    statistic=None (closed-frequent: no test, static min_sup only) gets an
+    all-INT_MAX table — lambda can never advance, and no mode that runs
+    without a statistic reads it anyway.
+    """
+    if statistic is None:
+        return np.full(n + 2, INT_MAX, dtype=np.int32)
+    thr = get_statistic(statistic).count_thresholds(n, n_pos, alpha)
     out = np.minimum(np.floor(thr), float(INT_MAX)).astype(np.int64)
     out = out.astype(np.int32)
     out[0] = INT_MAX  # bucket 0 never drives lambda
@@ -239,12 +260,17 @@ def deal_roots(packed: PackedProblem, n_proc: int, cfg: EngineConfig, min_sup: i
 def build_mine_step(
     *, n: int, n_pos: int, m: int, cfg: EngineConfig,
     schedule: LifelineSchedule, mode: str, axis: str = MINERS_AXIS,
+    statistic: str | None = "fisher",
 ):
     """Wire the superstep phases into the per-device BSP program body.
 
     `n`/`n_pos`/`m` are program (shape-bucket) dims; the dataset's actual
     transaction/positive counts are runtime scalar arguments of the returned
     program, so one compiled program serves every same-bucket dataset.
+    `statistic` names the registered test whose device P-value gates
+    emission in modes "test"/"count2d" (None = emit every counted closed
+    set); it is traced into the program, so fisher/chi2/None programs are
+    distinct compilation artifacts.
     """
     NB = n + 2
     NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
@@ -252,7 +278,8 @@ def build_mine_step(
     # exists in mode "lamp1"; other modes carry 1-element dummies
     SNB = NB if mode == "lamp1" else 1
     n_proc = schedule.n_proc
-    expand = build_expand(n=n, n_pos=n_pos, m=m, cfg=cfg, mode=mode)
+    expand = build_expand(n=n, n_pos=n_pos, m=m, cfg=cfg, mode=mode,
+                          statistic=statistic)
     steal_round = build_steal_round(schedule, cfg, axis)
     global_sync = build_global_sync(
         nb=NB, mode=mode, sync_period=cfg.sync_period, axis=axis
@@ -359,17 +386,21 @@ def build_phase_program(
     schedule: LifelineSchedule,
     mesh,
     mode: str,
+    statistic: str | None = "fisher",
 ):
     """shard_map'd (unjitted) BSP program for one engine pass.
 
     `packed_dims` = (n_pad, npos_pad, m_pad) — the program (bucket) dims.
     The returned callable takes the argument tuple built by
     `make_phase_args` and is what `repro.api.MinerSession` AOT-compiles and
-    caches; `mine()` wraps it in a fresh `jax.jit` per call.
+    caches; `mine()` wraps it in a fresh `jax.jit` per call.  `statistic`
+    reaches the traced emission test (modes "test"/"count2d" only), so it
+    must join any cache key for those modes.
     """
     n_pad, npos_pad, m_pad = packed_dims
     program = build_mine_step(
-        n=n_pad, n_pos=npos_pad, m=m_pad, cfg=cfg, schedule=schedule, mode=mode
+        n=n_pad, n_pos=npos_pad, m=m_pad, cfg=cfg, schedule=schedule,
+        mode=mode, statistic=statistic,
     )
     return collectives.shard_map(
         program,
@@ -393,18 +424,21 @@ def make_phase_args(
     alpha: float,
     min_sup: int,
     delta: float,
+    statistic: str | None = "fisher",
 ):
     """Build the program argument tuple (and the postprocess context).
 
     Every array's shape/dtype is a function of (bucket dims, cfg, n_proc)
     only, so repeat queries on a warm compiled program always re-match its
-    input signature exactly.
+    input signature exactly.  The statistic enters here as *runtime data*
+    (its Tarone threshold table); its traced half lives in
+    `build_phase_program`.
 
     Returns (args, ctx) with ctx = dict(thr, start_sup) for postprocess.
     """
     start_sup = min_sup if mode != "lamp1" else 1
     init_occ, init_meta, init_sp = deal_roots(packed, n_proc, cfg, start_sup)
-    thr = _thresholds_int(packed.n, packed.n_pos, alpha)
+    thr = _thresholds_int(packed.n, packed.n_pos, alpha, statistic)
     thr_pad = np.full(packed.n_pad + 2, INT_MAX, dtype=np.int32)
     thr_pad[: thr.shape[0]] = thr
     args = (
@@ -426,9 +460,13 @@ def postprocess_phase(
     thr: np.ndarray,
     start_sup: int,
     delta: float,
+    statistic: str | None = "fisher",
 ) -> MineOutput:
     """Device output -> MineOutput: slice padding, fold in the root closed
-    set, gather emitted pattern records, surface overflow."""
+    set, gather emitted pattern records, surface overflow.  `statistic`
+    must match the program's: the root closed set never transits the device
+    buffers, so its significance is re-decided host-side with the same test
+    (or counted unconditionally when statistic is None — closed-frequent)."""
     n, n_pos = packed.n, packed.n_pos
     root_sup = n  # support of the root closure == all transactions
     (g_hist, lam, t, stats, out_occ, out_meta, out_ptr, g_sig, trace,
@@ -473,10 +511,13 @@ def postprocess_phase(
             )
     if mode == "test":
         # root significance (host-side, same test as on device)
-        if root_sup >= start_sup and packed.has_labels:
-            from .fisher import fisher_pvalue
-
-            p_root = fisher_pvalue(root_sup, n_pos, n, n_pos)[0]
+        if statistic is None:
+            # closed-frequent objective: the root closed set counts whenever
+            # it clears the support threshold — there is no test to fail
+            if root_sup >= start_sup:
+                n_sig += 1
+        elif root_sup >= start_sup and packed.has_labels:
+            p_root = get_statistic(statistic).pvalue(root_sup, n_pos, n, n_pos)[0]
             if p_root <= delta:
                 n_sig += 1
 
@@ -514,6 +555,7 @@ def mine(
     cfg: EngineConfig = EngineConfig(),
     devices=None,
     packed: PackedProblem | None = None,
+    statistic: str | None = "fisher",
 ) -> MineOutput:
     """Run one engine pass over all (or the given) local devices.
 
@@ -523,7 +565,10 @@ def mine(
     which caches compiled programs across phases, queries, and same-bucket
     datasets.
     """
-    assert mode in ("lamp1", "count", "test", "count2d")
+    if mode not in VALID_MODES:
+        raise ValueError(
+            f"unknown engine mode {mode!r}; valid modes: {', '.join(VALID_MODES)}"
+        )
     if packed is None:
         packed = pack_problem(db_bool, labels)
     if devices is None:
@@ -534,16 +579,17 @@ def mine(
 
     args, ctx = make_phase_args(
         packed, n_proc=n_proc, cfg=cfg, mode=mode, alpha=alpha,
-        min_sup=min_sup, delta=delta,
+        min_sup=min_sup, delta=delta, statistic=statistic,
     )
     shardy = build_phase_program(
         (packed.n_pad, packed.npos_pad, packed.m_pad),
-        cfg=cfg, schedule=schedule, mesh=mesh, mode=mode,
+        cfg=cfg, schedule=schedule, mesh=mesh, mode=mode, statistic=statistic,
     )
     raw = jax.jit(shardy)(*args)
     return postprocess_phase(
         raw, packed=packed, n_proc=n_proc, cfg=cfg, mode=mode,
         thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
+        statistic=statistic,
     )
 
 

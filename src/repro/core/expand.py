@@ -29,8 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.stats import get_statistic
+
 from .deque import push_positions, top_indices
-from .fisher import fisher_pvalue_jnp
 from .stats import Stat
 
 __all__ = ["resolve_kernel_impl", "supports_gemm", "build_expand"]
@@ -61,7 +62,8 @@ def supports_gemm(occ_nodes, db_mw, db_wm, impl: str):
     )
 
 
-def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
+def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
+                 statistic: str | None = "fisher"):
     """Returns the expand phase for one superstep.
 
     `n`, `n_pos`, `m` are the *program* (shape-bucket) dims: every array is
@@ -76,6 +78,14 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     scatter above it — `head` itself only moves on steals, so EXPAND takes
     it read-only.
 
+    `statistic` names the registered `repro.stats.TestStatistic` whose
+    device P-value gates emission in modes "test"/"count2d"; it is baked
+    into the traced program, so it belongs in any compiled-program cache
+    key for those modes.  `statistic=None` emits *every* counted closed set
+    — the runtime `delta` argument is ignored on that branch (there is no
+    P-value to compare it against) — the plain closed-frequent objective:
+    same traversal, no test.
+
     expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
            db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
            npos_act)
@@ -88,6 +98,9 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
     testing = mode == "test"
     hist2d_mode = mode == "count2d"
     emitting = testing or hist2d_mode
+    pvalue_device = (
+        get_statistic(statistic).pvalue_device if statistic is not None else None
+    )
 
     def expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
                db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
@@ -127,9 +140,13 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str):
                 cell = jnp.clip(sup, 0, n) * (n_pos + 1) + jnp.clip(pos_sup, 0, n_pos)
                 hist2d = hist2d.at[cell].add(counted.astype(jnp.int32))
             # emit pattern records at delta (mode="test": the corrected level;
-            # mode="count2d": alpha — a superset the host filters exactly)
-            pvals = fisher_pvalue_jnp(sup, pos_sup, n_act, npos_act, k_max=n_pos)
-            sig = counted & (pvals <= delta)
+            # mode="count2d": alpha — a superset the host filters exactly);
+            # statistic=None emits every counted node (closed-frequent)
+            if pvalue_device is None:
+                sig = counted
+            else:
+                pvals = pvalue_device(sup, pos_sup, n_act, npos_act, k_max=n_pos)
+                sig = counted & (pvals <= delta)
             sig_cnt = jnp.sum(sig.astype(jnp.int32))
             sig_idx = jnp.nonzero(sig, size=B, fill_value=-1)[0]
             src = jnp.clip(sig_idx, 0, B - 1)

@@ -29,12 +29,13 @@ This module is the sequential oracle used by tests and small benchmarks.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
+from repro.stats import get_statistic
+
 from .bitmap import pack_db, support_np
-from .fisher import fisher_pvalue, lamp_count_thresholds, min_attainable_pvalue
 from .lcm import MiningStats, lcm_closed
 
 __all__ = ["LampResult", "SignificantPattern", "lamp_phase1", "lamp", "Phase1State"]
@@ -63,11 +64,18 @@ class LampResult:
 
 
 class Phase1State:
-    """Support-increase bookkeeping shared by the oracle and the engine tests."""
+    """Support-increase bookkeeping shared by the oracle and the engine tests.
 
-    def __init__(self, n_transactions: int, n_pos: int, alpha: float):
+    `statistic` names the registered `repro.stats.TestStatistic` whose
+    Tarone bound drives the thresholds (default: Fisher, the paper's test).
+    """
+
+    def __init__(self, n_transactions: int, n_pos: int, alpha: float,
+                 statistic: str = "fisher"):
         self.N = n_transactions
-        self.thr = lamp_count_thresholds(n_transactions, n_pos, alpha)
+        self.thr = get_statistic(statistic).count_thresholds(
+            n_transactions, n_pos, alpha
+        )
         self.cnt = np.zeros(n_transactions + 2, dtype=np.int64)
         self.lam = 1
 
@@ -83,28 +91,32 @@ class Phase1State:
         return self.lam
 
 
-def lamp_phase1(db_bool: np.ndarray, n_pos: int, alpha: float):
+def lamp_phase1(db_bool: np.ndarray, n_pos: int, alpha: float,
+                statistic: str = "fisher"):
     """Run phase 1; returns (lambda_final, min_sup, stats)."""
     db_bool = np.asarray(db_bool, dtype=bool)
     n = db_bool.shape[0]
-    state = Phase1State(n, n_pos, alpha)
+    state = Phase1State(n, n_pos, alpha, statistic)
     _, stats = lcm_closed(db_bool, min_sup=1, dynamic_min_sup=state.observe)
     lam_final = state.lam
     return lam_final, max(lam_final - 1, 1), stats
 
 
-def lamp(db_bool: np.ndarray, labels: np.ndarray, alpha: float = 0.05) -> LampResult:
+def lamp(db_bool: np.ndarray, labels: np.ndarray, alpha: float = 0.05,
+         statistic: str = "fisher") -> LampResult:
     """Full three-phase LAMP on a labelled transaction database.
 
-    db_bool: [N, M] bool; labels: [N] bool (positive class).
+    db_bool: [N, M] bool; labels: [N] bool (positive class); `statistic`
+    selects the registered test (Tarone bound AND phase-3 extraction).
     """
     db_bool = np.asarray(db_bool, dtype=bool)
     labels = np.asarray(labels, dtype=bool)
     n, m = db_bool.shape
     n_pos = int(labels.sum())
+    stat = get_statistic(statistic)
 
     # ---- phase 1: find min_sup by support increase
-    lam_final, min_sup, st1 = lamp_phase1(db_bool, n_pos, alpha)
+    lam_final, min_sup, st1 = lamp_phase1(db_bool, n_pos, alpha, statistic)
 
     # ---- phase 2: exact closed-set count at min_sup (+ collect for phase 3)
     from .bitmap import unpack_occ  # local import to avoid cycle at module load
@@ -121,12 +133,12 @@ def lamp(db_bool: np.ndarray, labels: np.ndarray, alpha: float = 0.05) -> LampRe
     k = len(collected)
     delta = alpha / max(k, 1)
 
-    # ---- phase 3: Fisher-exact extraction (paper: ~10 ms; merged sweep here)
+    # ---- phase 3: exact extraction (paper: ~10 ms; merged sweep here)
     significant = []
     if k:
         sups = np.array([c[1] for c in collected])
         pos_sups = np.array([c[2] for c in collected])
-        pvals = fisher_pvalue(sups, pos_sups, n, n_pos)
+        pvals = stat.pvalue(sups, pos_sups, n, n_pos)
         for (items, sup, psup), p in zip(collected, pvals):
             if p <= delta:
                 significant.append(SignificantPattern(items, sup, psup, float(p)))

@@ -1,12 +1,19 @@
-"""Distributed significant-pattern-mining launcher (the paper's workload).
+"""Distributed pattern-mining launcher (the paper's workload).
 
   python -m repro.launch.mine --problem hapmap_dom_10 --scale-items 0.02 \
       --devices 8 --alpha 0.05
 
-One-shot front-end over the session API (`repro.api`): builds a `Dataset`
-(packed once, SNP-style item names) and a `MinerSession`, runs one query,
-and prints the typed `MineReport`.  For sustained query traffic against a
-warm session use `repro.launch.mine_serve`.
+One-shot front-end over the query API (`repro.api`): builds a `Dataset`
+(packed once, SNP-style item names) and a `MinerSession`, runs one query
+object, and prints the typed `MineReport`.  The objective is selectable:
+
+  --query significant       LAMP staging at --alpha (default)
+  --query closed-frequent   every closed itemset with support >= --min-sup
+  --query topk              the --k most significant patterns, alpha-free
+
+and so is the test statistic (--stat fisher|chi2) for the testing
+objectives.  For sustained query traffic against a warm session use
+`repro.launch.mine_serve`.
 
 Set --devices N to fork with XLA_FLAGS=--xla_force_host_platform_device_count=N
 (one miner per device, as on a real pod slice); with --devices 0 the current
@@ -31,6 +38,17 @@ def main(argv=None):
     ap.add_argument("--scale-items", type=float, default=0.02)
     ap.add_argument("--scale-trans", type=float, default=1.0)
     ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--query", default="significant",
+                    choices=["significant", "closed-frequent", "topk"],
+                    help="mining objective (a repro.api.QUERIES key)")
+    ap.add_argument("--stat", default="fisher", choices=["fisher", "chi2"],
+                    help="test statistic (a repro.stats registry key; "
+                         "ignored by --query closed-frequent)")
+    ap.add_argument("--min-sup", type=int, default=0,
+                    help="support threshold for --query closed-frequent "
+                         "(required there; ignored elsewhere)")
+    ap.add_argument("--k", type=int, default=10,
+                    help="patterns to mine for --query topk")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--no-steal", action="store_true")
     ap.add_argument("--expand-batch", type=int, default=16)
@@ -56,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--json-out", default="")
     args = ap.parse_args(argv)
 
+    if args.query == "closed-frequent" and args.min_sup < 1:
+        ap.error("--query closed-frequent needs --min-sup N (N >= 1): the "
+                 "objective is every closed itemset with support >= N")
+
     if args.devices:
         from repro.core.collectives import force_host_device_count
 
@@ -64,7 +86,14 @@ def main(argv=None):
                   "ignored (set XLA_FLAGS before launch)", file=sys.stderr)
 
     from repro.api import (
-        PIPELINES, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
+        PIPELINES,
+        AlgorithmConfig,
+        ClosedFrequentQuery,
+        Dataset,
+        MinerSession,
+        RuntimeConfig,
+        SignificantPatternQuery,
+        TopKSignificantQuery,
     )
     from repro.results import score_planted
 
@@ -80,7 +109,8 @@ def main(argv=None):
           f"transactions, density {spec.density:.3f}, N_pos {spec.n_pos}")
 
     session = MinerSession(
-        algorithm=AlgorithmConfig(alpha=args.alpha, pipeline=args.pipeline),
+        algorithm=AlgorithmConfig(alpha=args.alpha, statistic=args.stat,
+                                  pipeline=args.pipeline),
         runtime=RuntimeConfig(
             expand_batch=args.expand_batch,
             steal_max=args.steal_max,
@@ -93,38 +123,55 @@ def main(argv=None):
             stack_cap=args.stack_cap or None,
         ),
     )
+    if args.query == "closed-frequent":
+        query = ClosedFrequentQuery(min_sup=args.min_sup)
+    elif args.query == "topk":
+        query = TopKSignificantQuery(k=args.k, statistic=args.stat)
+    else:
+        query = SignificantPatternQuery(
+            alpha=args.alpha, statistic=args.stat, pipeline=args.pipeline
+        )
     t0 = time.time()
-    report = session.mine(ds)
+    report = session.run(ds, query)
     dt = time.time() - t0
-    p2 = report.phases[1].output
+    # per-device work telemetry: the count phase for the LAMP staging
+    # (phases[1], the historical meaning of these JSON keys); objectives
+    # with a single/variable staging report their last traversal
+    work_phase = (report.phases[1] if report.query == "significant"
+                  and len(report.phases) > 1 else report.phases[-1]).output
     rs = report.results
-    score = score_planted(rs, ds.planted)
+    import math
+
     out = {
         "problem": spec.name,
-        "pipeline": args.pipeline,
+        "query": report.query,
+        "statistic": report.statistic,
+        "pipeline": report.pipeline,
         "lambda": report.lambda_final,
         "min_sup": report.min_sup,
         "closed_sets": report.correction_factor,
-        "delta": report.delta,
+        "delta": None if math.isnan(report.delta) else report.delta,
         "significant": report.n_significant,
         "patterns": len(rs),
         "patterns_complete": rs.complete,
-        "planted_recall": score["recall"],
         "wall_s": round(dt, 3),
         "supersteps": [p.supersteps for p in report.phases],
-        "per_device_popped": p2.stats["popped"].tolist(),
-        "steals": int(sum(p2.stats["steals_got"])),
+        "per_device_popped": work_phase.stats["popped"].tolist(),
+        "steals": int(sum(work_phase.stats["steals_got"])),
     }
-    print(json.dumps(out, indent=1))
+    if report.query == "significant":
+        out["planted_recall"] = score_planted(rs, ds.planted)["recall"]
+    print(json.dumps(out, indent=1, default=str))
 
-    print("\n" + rs.describe(args.top_k, planted=ds.planted))
+    planted = ds.planted if report.statistic is not None else None
+    print("\n" + rs.describe(args.top_k, planted=planted))
 
     if args.patterns_out:
         rs.save(args.patterns_out)
         print(f"[out] wrote {len(rs)} patterns to {args.patterns_out}")
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(out, f)
+            json.dump(out, f, default=str)
 
 
 if __name__ == "__main__":

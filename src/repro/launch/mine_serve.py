@@ -65,6 +65,8 @@ def main(argv=None):
     ap.add_argument("--alphas", default="0.05,0.01",
                     help="comma-separated significance levels cycled across queries")
     ap.add_argument("--pipeline", default="three_phase")
+    ap.add_argument("--stat", default="fisher", choices=["fisher", "chi2"],
+                    help="test statistic served by the session")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--expand-batch", type=int, default=16)
     ap.add_argument("--kernel", default="ref",
@@ -98,12 +100,12 @@ def main(argv=None):
     alphas = [float(a) for a in args.alphas.split(",") if a]
 
     session = MinerSession(
-        algorithm=AlgorithmConfig(pipeline=args.pipeline),
+        algorithm=AlgorithmConfig(pipeline=args.pipeline, statistic=args.stat),
         runtime=RuntimeConfig(expand_batch=args.expand_batch,
                               kernel_impl=args.kernel),
     )
     print(f"[serve] session over {session.n_devices} miners, "
-          f"pipeline={args.pipeline}, alphas={alphas}")
+          f"pipeline={args.pipeline}, stat={args.stat}, alphas={alphas}")
 
     # the query queue: reseeded same-shape cohorts (same bucket -> warm) at
     # cycling significance levels
@@ -136,6 +138,7 @@ def main(argv=None):
     summary = {
         "problem": args.problem,
         "pipeline": args.pipeline,
+        "statistic": args.stat,
         "devices": session.n_devices,
         "queries": len(lat),
         "total_wall_s": round(total, 3),

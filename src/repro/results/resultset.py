@@ -5,8 +5,10 @@ module answers "*which* patterns" (the paper's actual §5.6 deliverable).
 `build_result_set` turns the emitted device records into a `ResultSet`:
 
   gather (done in engine.mine) -> closure reconstruction (reconstruct.py)
-  -> dedup by closure -> exact float64 Fisher P-values + Bonferroni q-values
-  -> sort by P-value.
+  -> dedup by closure -> exact float64 P-values (the registered
+  `repro.stats` statistic that gated emission) + Bonferroni q-values
+  -> sort by P-value.  With statistic=None (closed-frequent queries)
+  patterns stay untested — NaN P/q, sorted by support.
 
 Two filtering regimes (DESIGN.md §4):
 
@@ -21,11 +23,12 @@ Two filtering regimes (DESIGN.md §4):
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.fisher import fisher_pvalue
+from repro.stats import get_statistic
 
 from .reconstruct import dedup_by_closure, reconstruct_closures
 
@@ -36,21 +39,25 @@ TSV_COLUMNS = ("rank", "items", "size", "support", "pos_support", "pvalue", "qva
 
 @dataclass(frozen=True)
 class Pattern:
-    """One significant closed itemset with its exact test statistics."""
+    """One mined closed itemset with its exact test statistics.
+
+    Untested patterns (closed-frequent queries: statistic=None) carry NaN
+    P/q-values; exports map them to null.
+    """
 
     items: tuple[int, ...]      # the closure, sorted item ids
     support: int                # x(I): transactions containing the itemset
     pos_support: int            # n(I): positive transactions containing it
-    pvalue: float               # exact one-sided Fisher P (float64, host)
-    qvalue: float               # Bonferroni-adjusted: min(1, P * k)
+    pvalue: float               # exact one-sided P (float64, host); NaN = untested
+    qvalue: float               # Bonferroni-adjusted: min(1, P * k); NaN = untested
 
     def as_dict(self) -> dict:
         return {
             "items": list(self.items),
             "support": int(self.support),
             "pos_support": int(self.pos_support),
-            "pvalue": float(self.pvalue),
-            "qvalue": float(self.qvalue),
+            "pvalue": None if math.isnan(self.pvalue) else float(self.pvalue),
+            "qvalue": None if math.isnan(self.qvalue) else float(self.qvalue),
         }
 
 
@@ -67,6 +74,7 @@ class ResultSet:
     delta: float = 0.05          # alpha / k, the corrected level
     n_dropped: int = 0           # device emissions lost to out_cap saturation
     item_names: tuple[str, ...] | None = None  # column id -> display name
+    statistic: str | None = "fisher"  # registered test; None = untested (frequent)
 
     @property
     def complete(self) -> bool:
@@ -93,16 +101,18 @@ class ResultSet:
         """Human-readable top-k summary — the one formatter the CLI and
         examples share, so pattern-line wording never drifts between them."""
         shown = min(top_k, len(self)) if top_k is not None else len(self)
+        kind = "significant" if self.statistic is not None else "closed frequent"
         lines = [
-            f"top {shown} of {len(self)} significant patterns"
+            f"top {shown} of {len(self)} {kind} patterns"
             + ("" if self.complete else f"  [INCOMPLETE: {self.n_dropped} dropped]")
         ]
         for rank, p in enumerate(self.top(top_k), start=1):
             shown = "[" + ", ".join(self.names_of(p)) + "]"
-            lines.append(
-                f" {rank:3d}  items={shown}  sup={p.support} "
-                f"pos={p.pos_support}  p={p.pvalue:.3e}  q={p.qvalue:.3e}"
-            )
+            line = (f" {rank:3d}  items={shown}  sup={p.support} "
+                    f"pos={p.pos_support}")
+            if not math.isnan(p.pvalue):
+                line += f"  p={p.pvalue:.3e}  q={p.qvalue:.3e}"
+            lines.append(line)
         if planted is not None:
             from .scoring import score_planted
 
@@ -119,10 +129,14 @@ class ResultSet:
         # a trailing `names` column is appended when the dataset named them
         cols = TSV_COLUMNS + (("names",) if self.item_names else ())
         lines = ["\t".join(cols)]
+
+        def fmt(v):  # untested (NaN) values export as empty cells, not "nan"
+            return "" if math.isnan(v) else f"{v:.6e}"
+
         for rank, p in enumerate(self.top(top_k), start=1):
             row = (
                 f"{rank}\t{','.join(map(str, p.items))}\t{len(p.items)}\t"
-                f"{p.support}\t{p.pos_support}\t{p.pvalue:.6e}\t{p.qvalue:.6e}"
+                f"{p.support}\t{p.pos_support}\t{fmt(p.pvalue)}\t{fmt(p.qvalue)}"
             )
             if self.item_names:
                 row += "\t" + ",".join(self.names_of(p))
@@ -140,13 +154,17 @@ class ResultSet:
                 d["names"] = self.names_of(p)
             return d
 
+        def nan_null(v):  # NaN is not valid JSON; untested runs export null
+            return None if isinstance(v, float) and math.isnan(v) else v
+
         payload = {
             "n_transactions": self.n_transactions,
             "n_pos": self.n_pos,
-            "alpha": self.alpha,
+            "statistic": self.statistic,
+            "alpha": nan_null(self.alpha),
             "min_sup": self.min_sup,
             "correction_factor": self.correction_factor,
-            "delta": self.delta,
+            "delta": nan_null(self.delta),
             "n_patterns": len(self.patterns),
             "complete": self.complete,
             "n_dropped": self.n_dropped,
@@ -181,8 +199,15 @@ def build_result_set(
     filter_host: bool = False,
     dropped: int = 0,
     item_names: tuple[str, ...] | None = None,
+    statistic: str | None = "fisher",
 ) -> ResultSet:
-    """Emitted records -> deduped, exactly-tested, sorted ResultSet."""
+    """Emitted records -> deduped, exactly-(re)tested, sorted ResultSet.
+
+    `statistic` names the registered test used for the exact host P-values
+    (it must match the device test that emitted the records); None skips
+    testing entirely — patterns carry NaN P/q and sort by support (the
+    closed-frequent objective).
+    """
     occ = np.asarray(occ, dtype=np.uint32).reshape(-1, db_bits.shape[1])
     sup = np.asarray(sup, dtype=np.int64).reshape(-1)
     pos_sup = np.asarray(pos_sup, dtype=np.int64).reshape(-1)
@@ -192,8 +217,17 @@ def build_result_set(
 
     k = max(int(correction_factor), 1)
     patterns: list[Pattern] = []
-    if len(closures):
-        pvals = fisher_pvalue(sup, pos_sup, n, n_pos)
+    if len(closures) and statistic is None:
+        for i in range(len(closures)):
+            patterns.append(Pattern(
+                items=closures[i],
+                support=int(sup[i]),
+                pos_support=int(pos_sup[i]),
+                pvalue=float("nan"),
+                qvalue=float("nan"),
+            ))
+    elif len(closures):
+        pvals = get_statistic(statistic).pvalue(sup, pos_sup, n, n_pos)
         keep = pvals <= delta if filter_host else np.ones(len(closures), bool)
         for i in np.flatnonzero(keep):
             p = float(pvals[i])
@@ -206,13 +240,18 @@ def build_result_set(
             ))
 
     # The root closed set (closure of the empty itemset) never rides the
-    # device buffers — but it also never belongs here: its one-sided Fisher
-    # P-value is exactly 1 (support n covers all n_pos positives by the
-    # margins, leaving the single hypergeometric table), and delta = alpha/k
-    # < 1 always, so the root cannot be significant and the pattern list
-    # stays consistent with engine.mine()'s host-side root count.
+    # device buffers, so it only appears here if the caller appended its
+    # record to the inputs.  Under Fisher it never qualifies (its one-sided
+    # P-value is exactly 1 — support n covers all n_pos positives by the
+    # margins — and delta = alpha/k < 1 always); other statistics can make
+    # it significant (chi2's root P is 0.5), and the session pipelines /
+    # ClosedFrequentQuery append it exactly when their host-side root count
+    # does, keeping the pattern list consistent with n_significant.
 
-    patterns.sort(key=lambda p: (p.pvalue, -p.support, p.items))
+    if statistic is None:
+        patterns.sort(key=lambda p: (-p.support, p.items))
+    else:
+        patterns.sort(key=lambda p: (p.pvalue, -p.support, p.items))
     return ResultSet(
         patterns=patterns,
         n_transactions=n,
@@ -223,4 +262,5 @@ def build_result_set(
         delta=delta,
         n_dropped=int(dropped),
         item_names=tuple(item_names) if item_names is not None else None,
+        statistic=statistic,
     )

@@ -1,0 +1,56 @@
+"""repro.stats — pluggable test statistics (the query layer's seam).
+
+The engine runs *one* GLB traversal; what makes it a Fisher miner, a
+chi-square miner, or a plain closed-frequent enumerator is which
+`TestStatistic` (or none) is threaded through the device emission test,
+the LAMP threshold table, and the host's exact re-test.  This package owns
+that seam:
+
+    from repro.stats import get_statistic
+    stat = get_statistic("chi2")
+    stat.pvalue(x, n, N, N_pos)            # host exact (float64)
+    stat.pvalue_device(x, n, N, N_pos, k_max=...)   # in-superstep (float32)
+    stat.count_thresholds(N, N_pos, alpha) # Tarone support-increase table
+
+Registered statistics: "fisher" (exact hypergeometric tail — the default,
+moved here from repro.core.fisher, which remains a re-export shim) and
+"chi2" (continuity-corrected one-sided chi-square upper bound).  Add your
+own with `register_statistic` — see stats/base.py for the soundness
+contract the LAMP staging relies on and tests/test_stats.py property-checks.
+"""
+
+from .base import (
+    STATISTICS,
+    TestStatistic,
+    get_statistic,
+    register_statistic,
+    thresholds_from_bound,
+)
+from .chi2 import ChiSquared, chi2_pvalue, chi2_pvalue_jnp
+from .fisher import (
+    FisherExact,
+    fisher_pvalue,
+    fisher_pvalue_jnp,
+    lamp_count_thresholds,
+    log_comb,
+    min_attainable_pvalue,
+    min_attainable_pvalue_jnp,
+)
+
+__all__ = [
+    "STATISTICS",
+    "TestStatistic",
+    "get_statistic",
+    "register_statistic",
+    "thresholds_from_bound",
+    "ChiSquared",
+    "chi2_pvalue",
+    "chi2_pvalue_jnp",
+    "FisherExact",
+    "fisher_pvalue",
+    "fisher_pvalue_jnp",
+    "lamp_count_thresholds",
+    "log_comb",
+    "min_attainable_pvalue",
+    "min_attainable_pvalue_jnp",
+]

@@ -1,0 +1,122 @@
+"""TestStatistic — the pluggable hypothesis-test seam of the miner.
+
+The paper's generalization (§3) re-targets one closed-pattern traversal by
+swapping the pruning bound; LAMP's own lineage swaps the *test* (Fisher,
+chi-square, Mann-Whitney) under the same Tarone staging.  Everything the
+engine and the LAMP staging need from a test statistic is four functions:
+
+  pvalue(x, n, N, N_pos)            exact host P-value (numpy, float64) —
+                                    drives ResultSet's reported values and
+                                    the sequential oracle
+  pvalue_device(x, n, N, N_pos,     batched device P-value (jax, float32) —
+                k_max=...)          the engine's in-superstep emission test;
+                                    k_max is a static bound on N_pos for
+                                    statistics that sum over it (Fisher),
+                                    ignored by closed-form ones (chi2)
+  min_attainable_pvalue(x, N,       Tarone's f(x): a lower bound on the
+                        N_pos)      P-value of ANY pattern with support x —
+                                    what makes low-support patterns
+                                    untestable and drives the lambda staging
+  count_thresholds(N, N_pos, alpha) thr[lam] = alpha / f(lam-1), the integer
+                                    support-increase table (monotone
+                                    non-decreasing on [1, N_pos+1])
+
+Soundness contract (what the LAMP staging actually relies on, and what
+tests/test_stats.py property-checks for every registered statistic):
+
+  * f(x) <= pvalue(x, n) for every attainable n — f really is attainable-
+    minimum or lower;
+  * count_thresholds is monotone non-decreasing on [1, N_pos+1], which is
+    equivalent to f being non-increasing there.  A statistic whose raw
+    per-support minimum is not monotone can register its *running-minimum
+    envelope* instead (still a valid lower bound, merely a slightly
+    conservative prune) — see stats/chi2.py.
+
+Statistics register by name in `STATISTICS`; the name is what flows through
+`Query.statistic`, `MinerSession.run_phase(..., statistic=)`, and into the
+session's compiled-program cache key.  A new statistic is ~50 lines: subclass
+`TestStatistic`, implement the four methods, call `register_statistic`.
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+
+import numpy as np
+
+__all__ = [
+    "STATISTICS",
+    "TestStatistic",
+    "get_statistic",
+    "register_statistic",
+    "thresholds_from_bound",
+]
+
+
+class TestStatistic(ABC):
+    """One hypothesis test over a 2x2 margin (x, n, N, N_pos)."""
+
+    #: registry key; also the cache-key component in MinerSession
+    name: str = ""
+
+    @abstractmethod
+    def pvalue(self, x, n, N, N_pos) -> np.ndarray:
+        """Exact one-sided (enrichment) P-value, host float64, vectorized
+        over same-shape x (total support) and n (positive support)."""
+
+    @abstractmethod
+    def pvalue_device(self, x, n, N, N_pos, *, k_max: int | None = None):
+        """Batched device P-value (jax float32).  N / N_pos may be traced
+        runtime scalars; `k_max` is a static upper bound on N_pos for
+        statistics whose kernel sums over it (shape-bucket sharing)."""
+
+    @abstractmethod
+    def min_attainable_pvalue(self, x, N, N_pos) -> np.ndarray:
+        """Tarone bound f(x): lower bound on pvalue(x, n) over all n."""
+
+    @abstractmethod
+    def count_thresholds(self, N, N_pos, alpha) -> np.ndarray:
+        """thr[lam] = alpha / f(lam-1) for lam = 0..N+1 (thr[0] unused),
+        monotone non-decreasing on [1, N_pos+1], +inf past the cap."""
+
+    def __repr__(self) -> str:
+        return f"<TestStatistic {self.name!r}>"
+
+
+def thresholds_from_bound(f, N: int, N_pos: int, alpha: float) -> np.ndarray:
+    """Generic count_thresholds: alpha / f(lam-1), frozen past N_pos + 1.
+
+    `f(x_array) -> lower-bound array` must be non-increasing on the capped
+    range; the cap keeps lambda from ever advancing past N_pos + 1 (the
+    same guard fisher's table applies — beyond it the raw per-support
+    minimum need not be monotone).
+    """
+    lam = np.arange(N + 2)
+    fx = np.asarray(f(np.maximum(lam - 1, 0)), dtype=np.float64)
+    thr = alpha / np.maximum(fx, 1e-300)
+    cap = min(N_pos + 1, N + 1)
+    thr[cap + 1:] = np.inf
+    return thr
+
+
+#: name -> TestStatistic instance (the query layer's statistic registry)
+STATISTICS: dict[str, TestStatistic] = {}
+
+
+def register_statistic(stat: TestStatistic) -> TestStatistic:
+    """Register (or replace) a statistic under `stat.name`."""
+    if not stat.name:
+        raise ValueError("TestStatistic.name must be a non-empty string")
+    STATISTICS[stat.name] = stat
+    return stat
+
+
+def get_statistic(name: str) -> TestStatistic:
+    """Resolve a registered statistic by name (actionable on typos)."""
+    try:
+        return STATISTICS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown test statistic {name!r}; registered statistics: "
+            f"{sorted(STATISTICS)}"
+        ) from None

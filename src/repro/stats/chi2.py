@@ -1,0 +1,108 @@
+"""One-sided continuity-corrected chi-square test as a `TestStatistic`.
+
+LAMP's own lineage generalizes its Fisher test to the chi-square
+approximation (the cheap screen of choice at cohort scales where the
+hypergeometric tail sum is overkill).  For the 2x2 table of a pattern with
+total support x and positive support n in a cohort of N transactions
+(N_pos positives),
+
+    a = n            b = x - n
+    c = N_pos - n    d = N - N_pos - x + n
+
+the Yates continuity-corrected statistic is
+
+    T = N * (|ad - bc| - N/2)^2 / ((a+b)(c+d)(a+c)(b+d))
+      = N * (max(|n*N - x*N_pos| - N/2, 0))^2 / (x (N-x) N_pos (N-N_pos))
+
+and the one-sided (enrichment) upper-bound P-value is the normal tail at
+the *signed* root,  p = P(Z >= sign(n*N - x*N_pos) * sqrt(T)).  The tail is
+evaluated entirely in log-space (`log_ndtr`) — at GWAS scales T reaches the
+thousands and the naive sf() underflows even float64 — then exponentiated
+with the same clips the Fisher implementation uses (-745 host / -87
+device).  Degenerate margins (x = 0, x = N, N_pos in {0, N}) zero the
+denominator; T is defined as 0 there, giving the null p = 0.5.
+
+Tarone bound.  The statistic is monotone in n for fixed x (T's numerator
+grows with |n*N - x*N_pos| while the denominator ignores n), so the
+per-support minimum is attained at n* = min(x, N_pos).  Unlike Fisher's
+f(x), that raw minimum is not guaranteed monotone in x under the continuity
+correction, so `min_attainable_pvalue` returns its *running-minimum
+envelope* over x — still a valid lower bound for every support (envelope <=
+raw minimum <= any attainable p), merely a conservative prune where the raw
+curve wiggles — which makes `count_thresholds` monotone by construction
+(the soundness contract in stats/base.py).
+
+Verified against a scipy oracle (chi2.logsf(T, df=1) - log 2 on the
+enrichment side) in tests/test_stats.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+from jax.scipy.special import log_ndtr as log_ndtr_jnp
+
+from .base import TestStatistic, register_statistic, thresholds_from_bound
+
+__all__ = ["ChiSquared", "chi2_pvalue", "chi2_pvalue_jnp"]
+
+
+def _signed_root(x, n, N, N_pos, xp):
+    """z = sign(n*N - x*N_pos) * sqrt(T) for the Yates-corrected T."""
+    num = n * N - x * N_pos
+    corr = xp.maximum(xp.abs(num) - N / 2.0, 0.0)
+    denom = x * (N - x) * N_pos * (N - N_pos)
+    t = xp.where(denom > 0, N * corr * corr / xp.maximum(denom, 1.0), 0.0)
+    return xp.sign(num) * xp.sqrt(t)
+
+
+def chi2_pvalue(x, n, N, N_pos):
+    """One-sided continuity-corrected chi-square P-value (host float64)."""
+    from scipy.special import log_ndtr  # host-side dep, same as log_comb
+
+    x = np.atleast_1d(np.asarray(x, dtype=np.float64))
+    n = np.atleast_1d(np.asarray(n, dtype=np.float64))
+    z = _signed_root(x, n, float(N), float(N_pos), np)
+    # P(Z >= z) = ndtr(-z), in log space to survive the deep tail
+    return np.exp(np.clip(log_ndtr(-z), -745.0, 0.0))
+
+
+def chi2_pvalue_jnp(x, n, N, N_pos, k_max: int | None = None):
+    """Batched device P-value (float32).  Closed-form — `k_max` (the static
+    N_pos bound Fisher's summation axis needs) is accepted and ignored, so
+    both statistics share one engine call signature."""
+    del k_max
+    x = jnp.asarray(x, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    N = jnp.asarray(N, jnp.float32)
+    N_pos = jnp.asarray(N_pos, jnp.float32)
+    z = _signed_root(x, n, N, N_pos, jnp)
+    return jnp.exp(jnp.clip(log_ndtr_jnp(-z), -87.0, 0.0))
+
+
+class ChiSquared(TestStatistic):
+    """Continuity-corrected one-sided chi-square, registered as "chi2"."""
+
+    name = "chi2"
+
+    def pvalue(self, x, n, N, N_pos):
+        return chi2_pvalue(x, n, N, N_pos)
+
+    def pvalue_device(self, x, n, N, N_pos, *, k_max: int | None = None):
+        return chi2_pvalue_jnp(x, n, N, N_pos, k_max=k_max)
+
+    def min_attainable_pvalue(self, x, N, N_pos):
+        x = np.atleast_1d(np.asarray(x, dtype=np.int64))
+        grid = np.arange(0, int(N) + 1)
+        raw = chi2_pvalue(grid, np.minimum(grid, int(N_pos)), N, N_pos)
+        env = np.minimum.accumulate(raw)  # monotone non-increasing envelope
+        return env[np.clip(x, 0, int(N))]
+
+    def count_thresholds(self, N, N_pos, alpha):
+        return thresholds_from_bound(
+            lambda xs: self.min_attainable_pvalue(xs, N, N_pos), N, N_pos, alpha
+        )
+
+
+register_statistic(ChiSquared())

@@ -1,0 +1,188 @@
+"""Exact one-sided Fisher's exact test and Tarone's minimum-attainable P-value bound.
+
+This is the statistical core of LAMP (paper §3.1-3.2):
+
+  P(I) = sum_{n_i = n(I)}^{min(x(I), N_pos)}  C(N_pos, n_i) C(N - N_pos, x - n_i) / C(N, x)
+
+  f(x) = C(N_pos, x) / C(N, x)        (lower bound, paper Eq. in §3.2; general form
+                                        uses n* = min(x, N_pos))
+
+Everything is computed in log-space with lgamma for exactness at GWAS scales
+(N up to ~13k transactions).  Two parallel implementations:
+
+  * numpy (host): used by the sequential oracle and phase-3 extraction.
+  * jax.numpy (device): used by the distributed engine for batched testing.
+
+The `FisherExact` class at the bottom adapts these functions to the
+`TestStatistic` protocol (stats/base.py) and registers them as "fisher" —
+the default statistic of every query.  The function-level API is kept
+public (and re-exported by the legacy `repro.core.fisher` shim) because the
+oracles and half the test suite call it directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .base import TestStatistic, register_statistic
+
+__all__ = [
+    "FisherExact",
+    "log_comb",
+    "fisher_pvalue",
+    "min_attainable_pvalue",
+    "lamp_count_thresholds",
+    "fisher_pvalue_jnp",
+    "min_attainable_pvalue_jnp",
+]
+
+
+# --------------------------------------------------------------------------- numpy
+def log_comb(n, k):
+    """log C(n, k) with -inf for invalid k (k<0 or k>n). Vectorized."""
+    n = np.asarray(n, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64)
+    from scipy.special import gammaln  # scipy is a test/analysis dep; host-side only
+
+    valid = (k >= 0) & (k <= n)
+    kk = np.where(valid, k, 0.0)
+    out = gammaln(n + 1) - gammaln(kk + 1) - gammaln(n - kk + 1)
+    return np.where(valid, out, -np.inf)
+
+
+def fisher_pvalue(x, n, N, N_pos):
+    """One-sided (enrichment) Fisher exact P-value.
+
+    x: total support of the itemset; n: support within positives.
+    Returns P[#positives >= n | margins] under the hypergeometric null.
+    Vectorized over x, n (same shape).
+    """
+    x = np.atleast_1d(np.asarray(x, dtype=np.int64))
+    n = np.atleast_1d(np.asarray(n, dtype=np.int64))
+    hi = np.minimum(x, N_pos)  # [B]
+    max_hi = int(hi.max()) if hi.size else 0
+    ni = np.arange(max_hi + 1)[None, :]  # [1, K]
+    mask = (ni >= n[:, None]) & (ni <= hi[:, None])
+    logp = (
+        log_comb(N_pos, ni)
+        + log_comb(N - N_pos, x[:, None] - ni)
+        - log_comb(N, x)[:, None]
+    )
+    logp = np.where(mask, logp, -np.inf)
+    m = np.max(logp, axis=1, keepdims=True)
+    m = np.where(np.isfinite(m), m, 0.0)
+    p = np.exp(m[:, 0]) * np.sum(np.exp(logp - m), axis=1)
+    return np.clip(p, 0.0, 1.0)
+
+
+def min_attainable_pvalue(x, N, N_pos):
+    """Tarone bound f(x): smallest achievable P-value for an itemset of support x.
+
+    Attained when the itemset covers n* = min(x, N_pos) positives.
+    f(x) = C(N_pos, n*) C(N-N_pos, x-n*) / C(N, x); reduces to the paper's
+    C(N_pos, x)/C(N, x) for x <= N_pos.
+    """
+    x = np.asarray(x, dtype=np.int64)
+    n_star = np.minimum(x, N_pos)
+    logf = (
+        log_comb(N_pos, n_star)
+        + log_comb(N - N_pos, x - n_star)
+        - log_comb(N, x)
+    )
+    return np.exp(np.clip(logf, -745.0, 0.0))
+
+
+def lamp_count_thresholds(N, N_pos, alpha):
+    """thr[lam] = alpha / f(lam-1) for lam = 0..N+1 (thr[0] unused).
+
+    The support-increase procedure advances lambda while
+    CS(lambda) > thr[lambda]  <=>  f(lambda-1) > alpha / CS(lambda)  (paper Eq. 3.1).
+    Monotone non-decreasing in lam on [1, N_pos+1]; clamped beyond N_pos+1 so the
+    minimum support never exceeds N_pos (f is no longer monotone past N_pos).
+    """
+    lam = np.arange(N + 2)
+    f = min_attainable_pvalue(np.maximum(lam - 1, 0), N, N_pos)
+    thr = alpha / np.maximum(f, 1e-300)
+    # freeze thresholds past N_pos + 1: f() loses monotonicity there, so lambda
+    # must never be advanced past N_pos + 1.
+    cap = min(N_pos + 1, N + 1)
+    thr[cap + 1 :] = np.inf
+    return thr
+
+
+# --------------------------------------------------------------------------- jax
+def _log_comb_jnp(n, k):
+    n = jnp.asarray(n, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    valid = (k >= 0) & (k <= n)
+    kk = jnp.where(valid, k, 0.0)
+    out = (
+        jax.scipy.special.gammaln(n + 1)
+        - jax.scipy.special.gammaln(kk + 1)
+        - jax.scipy.special.gammaln(n - kk + 1)
+    )
+    return jnp.where(valid, out, -jnp.inf)
+
+
+def fisher_pvalue_jnp(x, n, N, N_pos, k_max: int | None = None):
+    """Batched one-sided Fisher exact P-value on device (float32 log-space).
+
+    x, n: int arrays [B].  The n_i summation axis must be statically sized:
+    by default it is N_pos+1 (requires a concrete N_pos); pass `k_max` — any
+    static upper bound on N_pos — to let N and N_pos be traced runtime
+    scalars, so one compiled program serves every dataset whose positives fit
+    the bound (the shape-bucket sharing in repro.api).  Terms past the true
+    N_pos are masked out via hi = min(x, N_pos), so the value is unchanged.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    ni_hi = int(N_pos) if k_max is None else int(k_max)
+    ni = jnp.arange(ni_hi + 1, dtype=jnp.int32)[None, :]
+    hi = jnp.minimum(x, N_pos)[:, None]
+    mask = (ni >= n[:, None]) & (ni <= hi)
+    logp = (
+        _log_comb_jnp(N_pos, ni)
+        + _log_comb_jnp(N - N_pos, x[:, None] - ni)
+        - _log_comb_jnp(N, x)[:, None]
+    )
+    logp = jnp.where(mask, logp, -jnp.inf)
+    m = jnp.max(logp, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(m[:, 0]) * jnp.sum(jnp.exp(logp - m), axis=1)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def min_attainable_pvalue_jnp(x, N, N_pos):
+    x = jnp.asarray(x, jnp.int32)
+    n_star = jnp.minimum(x, N_pos)
+    logf = (
+        _log_comb_jnp(N_pos, n_star)
+        + _log_comb_jnp(N - N_pos, x - n_star)
+        - _log_comb_jnp(N, x)
+    )
+    return jnp.exp(jnp.clip(logf, -87.0, 0.0))
+
+
+# ------------------------------------------------------------ TestStatistic
+class FisherExact(TestStatistic):
+    """Fisher's exact test as a registered `TestStatistic` ("fisher")."""
+
+    name = "fisher"
+
+    def pvalue(self, x, n, N, N_pos):
+        return fisher_pvalue(x, n, N, N_pos)
+
+    def pvalue_device(self, x, n, N, N_pos, *, k_max: int | None = None):
+        return fisher_pvalue_jnp(x, n, N, N_pos, k_max=k_max)
+
+    def min_attainable_pvalue(self, x, N, N_pos):
+        return min_attainable_pvalue(x, N, N_pos)
+
+    def count_thresholds(self, N, N_pos, alpha):
+        return lamp_count_thresholds(N, N_pos, alpha)
+
+
+register_statistic(FisherExact())

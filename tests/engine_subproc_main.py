@@ -50,7 +50,51 @@ def main():
         kernel_impl=spec.get("kernel_impl", "ref"),
     )
     out = {}
-    if spec["mode"] == "session":
+    if spec["mode"] == "run_vs_legacy":
+        # the query-object path vs the legacy one-shot shim, same devices:
+        # session.run(SignificantPatternQuery) must reproduce the
+        # lamp_distributed dict bit-identically (incl. exact P-values)
+        import warnings
+
+        from repro.api import Dataset, MinerSession, RuntimeConfig, SignificantPatternQuery
+
+        def patterns_of(rs):
+            return [
+                [list(p.items), p.support, p.pos_support, p.pvalue, p.qvalue]
+                for p in rs
+            ]
+
+        pipeline = spec.get("pipeline", "three_phase")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = lamp_distributed(
+                db, labels, alpha=spec.get("alpha", 0.05), cfg=cfg,
+                pipeline=pipeline,
+            )
+        session = MinerSession(
+            runtime=RuntimeConfig.from_engine_config(cfg))
+        rep = session.run(
+            Dataset.from_dense(db, labels),
+            SignificantPatternQuery(alpha=spec.get("alpha", 0.05),
+                                    statistic="fisher", pipeline=pipeline),
+        )
+        out = {
+            "legacy": {
+                "min_sup": legacy["min_sup"],
+                "correction_factor": legacy["correction_factor"],
+                "delta": legacy["delta"],
+                "n_significant": legacy["n_significant"],
+                "patterns": patterns_of(legacy["results"]),
+            },
+            "run": {
+                "min_sup": rep.min_sup,
+                "correction_factor": rep.correction_factor,
+                "delta": rep.delta,
+                "n_significant": rep.n_significant,
+                "patterns": patterns_of(rep.results),
+            },
+        }
+    elif spec["mode"] == "session":
         # two queries (reseeded same-shape datasets) on one MinerSession:
         # returns both pattern sets plus the program-cache counters so the
         # parent can assert the second query compiled nothing

@@ -1,14 +1,19 @@
 """Session API: Dataset packing/bucketing, compile-once MinerSession,
-typed reports, and the legacy lamp_distributed shim.
+first-class Query objects, typed reports, and the legacy shim.
 
-The acceptance bar (ISSUE 3): a repeated query on a warm session (same
-shape bucket) triggers **zero** recompiles — asserted via cache_info() —
-and returns bit-identical ResultSets (incl. exact P-values) to a fresh
+Acceptance bars: a repeated query on a warm session (same shape bucket)
+triggers **zero** recompiles — asserted via cache_info() — and returns
+bit-identical ResultSets (incl. exact P-values) to a fresh
 `lamp_distributed` run, on 1 in-process device and on 8 simulated devices
-(subprocess); the shim still returns the documented dict and warns.
+(subprocess); `session.run(SignificantPatternQuery(statistic="fisher"))`
+reproduces the legacy `mine()` path bit-identically on both device counts;
+chi2 / closed-frequent / top-k queries match sequential host oracles;
+fisher and chi2 occupy distinct test-program cache entries while sharing
+lamp1/count; the program cache is LRU-bounded.
 """
 
 import json
+import math
 import os
 import subprocess
 import sys
@@ -21,10 +26,13 @@ import jax
 from repro.api import (
     EXACT_BUCKETS,
     BucketPolicy,
+    ClosedFrequentQuery,
     Dataset,
     MinerSession,
     RuntimeConfig,
     ShapeBucket,
+    SignificantPatternQuery,
+    TopKSignificantQuery,
 )
 from repro.core.engine import EngineConfig, MineOutput, lamp_distributed
 from repro.data.synthetic import SyntheticSpec, generate
@@ -310,6 +318,271 @@ def run_subproc(spec: dict) -> dict:
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ------------------------------------------------- first-class Query objects
+def _closed_oracle(db, labels, min_sup):
+    """Sequential closed-frequent oracle: [(frozenset, sup, pos_sup)]."""
+    from repro.core.bitmap import unpack_occ
+    from repro.core.lcm import lcm_closed
+
+    n = db.shape[0]
+    out = []
+
+    def on_closed(occ, sup, clo):
+        pos = int(np.count_nonzero(unpack_occ(occ, n) & labels)) \
+            if labels is not None else 0
+        out.append((frozenset(clo.tolist()), sup, pos))
+
+    lcm_closed(db, min_sup=min_sup, on_closed=on_closed)
+    return out
+
+
+def test_run_fisher_query_bit_identical_to_legacy_mine():
+    """session.run(SignificantPatternQuery(statistic="fisher")) reproduces
+    the legacy mine()/lamp_distributed path bit-for-bit, both pipelines."""
+    db, labels, _ = small_problem(seed=3)
+    for pipeline in ("three_phase", "fused23"):
+        session = MinerSession(runtime=RUNTIME)
+        rep = session.run(
+            Dataset.from_dense(db, labels),
+            SignificantPatternQuery(alpha=0.05, statistic="fisher",
+                                    pipeline=pipeline),
+        )
+        ref = _legacy(db, labels, pipeline=pipeline)
+        assert rep.min_sup == ref["min_sup"]
+        assert rep.correction_factor == ref["correction_factor"]
+        assert rep.delta == ref["delta"]
+        assert rep.n_significant == ref["n_significant"]
+        assert _keys(rep.results) == _keys(ref["results"])
+        assert rep.statistic == "fisher" and rep.query == "significant"
+
+
+def test_chi2_query_matches_sequential_oracle():
+    from repro.core.lamp import lamp
+
+    db, labels, _ = small_problem(seed=1)
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+    for pipeline in ("three_phase", "fused23"):
+        rep = session.run(ds, SignificantPatternQuery(
+            alpha=0.05, statistic="chi2", pipeline=pipeline))
+        ref = lamp(db, labels, alpha=0.05, statistic="chi2")
+        assert rep.min_sup == ref.min_sup
+        assert rep.correction_factor == ref.correction_factor
+        assert rep.delta == ref.delta
+        assert rep.n_significant == len(ref.significant)
+        got = {(p.items, p.support, p.pos_support) for p in rep.results}
+        want = {(tuple(sorted(s.items)), s.support, s.pos_support)
+                for s in ref.significant}
+        assert got == want
+        # exact host P-values match the oracle's
+        oracle_p = {tuple(sorted(s.items)): s.pvalue for s in ref.significant}
+        for p in rep.results:
+            assert p.pvalue == pytest.approx(oracle_p[p.items], rel=1e-12)
+
+
+def test_fisher_chi2_distinct_programs_lamp1_count_shared():
+    """The statistic joins the cache key for the traced modes only: fisher
+    and chi2 test programs are distinct entries; lamp1/count are shared, so
+    the second statistic compiles exactly one new program — and warm repeat
+    queries of either statistic re-trace zero times."""
+    db, labels, _ = small_problem(seed=2)
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+
+    session.mine(ds)                                   # fisher: 3 compiles
+    ci1 = session.cache_info()
+    assert ci1.misses == 3
+    session.run(ds, SignificantPatternQuery(statistic="chi2"))
+    ci2 = session.cache_info()
+    assert ci2.misses == 4                             # only the chi2 test
+    test_entries = {p.statistic for p in ci2.programs if p.mode == "test"}
+    assert test_entries == {"fisher", "chi2"}
+    shared = {p.statistic for p in ci2.programs if p.mode in ("lamp1", "count")}
+    assert shared == {None}
+
+    # warm repeats of BOTH statistics: zero new compiles
+    for stat in ("fisher", "chi2"):
+        before = session.cache_info().misses
+        rep = session.run(ds, SignificantPatternQuery(statistic=stat))
+        assert session.cache_info().misses == before
+        assert not rep.cold
+
+
+def test_closed_frequent_query_matches_lcm_oracle():
+    db, labels, _ = small_problem(seed=0)
+    session = MinerSession(runtime=RUNTIME)
+    rep = session.run(Dataset.from_dense(db, labels),
+                      ClosedFrequentQuery(min_sup=10))
+    oracle = _closed_oracle(db, labels, 10)
+    assert rep.n_significant == len(oracle)
+    from repro.api import QUERIES
+
+    assert rep.query == "closed-frequent" and rep.statistic is None
+    assert rep.query in QUERIES  # the tag round-trips into the registry
+    got = {(frozenset(p.items), p.support, p.pos_support) for p in rep.results}
+    want = set(oracle)
+    assert got == want
+    # untested patterns carry NaN P/q, sort by support, export null
+    assert all(math.isnan(p.pvalue) and math.isnan(p.qvalue)
+               for p in rep.results)
+    sups = [p.support for p in rep.results]
+    assert sups == sorted(sups, reverse=True)
+    payload = json.loads(rep.results.to_json())
+    assert payload["statistic"] is None
+    assert payload["patterns"][0]["pvalue"] is None
+    # TSV exports untested P/q as empty cells, never the string "nan"
+    tsv_row = rep.results.to_tsv().splitlines()[1].split("\t")
+    assert tsv_row[5] == "" and tsv_row[6] == ""
+
+    # top_k truncates the ResultSet; the count stays exact
+    rep_k = session.run(Dataset.from_dense(db, labels),
+                        ClosedFrequentQuery(min_sup=10, top_k=3))
+    assert len(rep_k.results) == 3
+    assert rep_k.n_significant == len(oracle)
+    assert [p.support for p in rep_k.results] == sups[:3]
+
+
+def test_closed_frequent_works_without_labels():
+    db, _, _ = small_problem(seed=5)
+    session = MinerSession(runtime=RUNTIME)
+    rep = session.run(Dataset.from_dense(db, None), ClosedFrequentQuery(min_sup=12))
+    oracle = _closed_oracle(db, None, 12)
+    assert rep.n_significant == len(oracle)
+    assert {frozenset(p.items) for p in rep.results} == \
+        {c[0] for c in oracle}
+
+
+def test_topk_query_matches_oracle_and_probes_stay_warm():
+    from repro.stats import get_statistic
+
+    db, labels, _ = small_problem(seed=4)
+    n, n_pos = db.shape[0], int(labels.sum())
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+    rep = session.run(ds, TopKSignificantQuery(k=6))
+    # every probe reuses ONE compiled test program
+    assert session.cache_info().misses == 1
+    assert len(rep.phases) >= 1
+    assert sum(not p.cache_hit for p in rep.phases) == 1
+
+    oracle = _closed_oracle(db, labels, 1)
+    pv = get_statistic("fisher").pvalue(
+        np.array([c[1] for c in oracle]), np.array([c[2] for c in oracle]),
+        n, n_pos)
+    want = np.sort(pv)[:6]
+    got = np.array([p.pvalue for p in rep.results])
+    assert len(got) == 6
+    assert np.all(np.diff(got) >= 0)
+    assert np.allclose(got, want, rtol=1e-12)
+    assert rep.n_significant == 6 and rep.query == "topk"
+
+    # warm second top-k (different k): still zero new compiles
+    rep2 = session.run(ds, TopKSignificantQuery(k=2))
+    assert session.cache_info().misses == 1
+    assert [p.pvalue for p in rep2.results] == [p.pvalue for p in rep.results][:2]
+
+
+def test_query_constructors_validate_parameters():
+    with pytest.raises(ValueError, match="alpha.*\\(0, 1\\)"):
+        SignificantPatternQuery(alpha=1.5)
+    with pytest.raises(ValueError, match="alpha"):
+        SignificantPatternQuery(alpha=0.0)
+    with pytest.raises(ValueError, match="unknown test statistic"):
+        SignificantPatternQuery(statistic="nope")
+    with pytest.raises(ValueError, match="min_sup must be an int >= 1"):
+        ClosedFrequentQuery(min_sup=0)
+    with pytest.raises(ValueError, match="top_k"):
+        ClosedFrequentQuery(min_sup=5, top_k=0)
+    with pytest.raises(ValueError, match="k must be an int >= 1"):
+        TopKSignificantQuery(k=0)
+    with pytest.raises(ValueError, match="unknown test statistic"):
+        TopKSignificantQuery(k=3, statistic="nope")
+
+
+def test_run_phase_and_run_validate_inputs():
+    db, labels, _ = small_problem()
+    session = MinerSession(runtime=RUNTIME)
+    ds = Dataset.from_dense(db, labels)
+    # a bare assert would vanish under python -O; this must stay a ValueError
+    with pytest.raises(ValueError, match="unknown engine mode.*lamp1"):
+        session.run_phase(ds, "count3d")
+    with pytest.raises(ValueError, match="unknown test statistic"):
+        session.run_phase(ds, "test", statistic="nope")
+    with pytest.raises(TypeError, match="repro.api.Query"):
+        session.run(ds, "significant")
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        session.run(ds, SignificantPatternQuery(pipeline="nope"))
+    # testing objectives refuse unlabelled datasets with an actionable error
+    ds_unlabelled = Dataset.from_dense(db, None)
+    with pytest.raises(ValueError, match="labels"):
+        session.run(ds_unlabelled, SignificantPatternQuery())
+    with pytest.raises(ValueError, match="labels"):
+        session.run(ds_unlabelled, TopKSignificantQuery(k=3))
+    # statistic=None means "no test" elsewhere; mine() must not read it as
+    # "session default" silently
+    with pytest.raises(ValueError, match="ClosedFrequentQuery"):
+        session.mine(ds, statistic=None)
+
+
+def test_engine_mine_rejects_unknown_mode():
+    from repro.core.engine import mine
+
+    db, labels, _ = small_problem()
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        mine(db, labels, mode="bogus")
+
+
+# ------------------------------------------------------- bounded program cache
+def test_program_cache_lru_eviction_and_clear():
+    db, labels, _ = small_problem(seed=0)
+    session = MinerSession(runtime=RUNTIME.with_options(max_programs=2))
+    ds = Dataset.from_dense(db, labels)
+
+    session.run_phase(ds, "lamp1")
+    session.run_phase(ds, "count", min_sup=5)
+    ci = session.cache_info()
+    assert (ci.n_programs, ci.evictions) == (2, 0)
+
+    # third program evicts the least recently used (lamp1)
+    session.run_phase(ds, "test", min_sup=5, delta=1e-4)
+    ci = session.cache_info()
+    assert (ci.n_programs, ci.evictions) == (2, 1)
+    assert {p.mode for p in ci.programs} == {"count", "test"}
+    assert "evicted" in str(ci)
+
+    # a hit refreshes recency: count survives the next insertion
+    session.run_phase(ds, "count", min_sup=5)
+    session.run_phase(ds, "lamp1")
+    ci = session.cache_info()
+    assert {p.mode for p in ci.programs} == {"count", "lamp1"}
+    assert ci.evictions == 2
+
+    # evicted programs recompile on return (a new miss)
+    misses = ci.misses
+    session.run_phase(ds, "test", min_sup=5, delta=1e-4)
+    assert session.cache_info().misses == misses + 1
+
+    # clear_cache drops everything but keeps the counters
+    n = session.clear_cache()
+    ci2 = session.cache_info()
+    assert n == 2 and ci2.n_programs == 0
+    assert ci2.misses == misses + 1 and ci2.evictions == 3
+
+    with pytest.raises(ValueError, match="max_programs"):
+        MinerSession(runtime=RUNTIME.with_options(max_programs=0))
+
+
+@pytest.mark.slow
+def test_run_vs_legacy_8dev_bit_identical():
+    """8 simulated miners: session.run(SignificantPatternQuery) reproduces
+    the legacy lamp_distributed dict bit-identically (incl. P-values)."""
+    prob = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20, seed=1)
+    for pipeline in ("three_phase", "fused23"):
+        got = run_subproc(dict(prob, mode="run_vs_legacy", n_devices=8,
+                               pipeline=pipeline))
+        assert got["run"] == got["legacy"], pipeline
 
 
 @pytest.mark.slow

@@ -1,0 +1,220 @@
+"""repro.stats — the pluggable test-statistic layer.
+
+chi2 is verified against an independent scipy oracle (chi2 distribution
+tail vs our normal-tail log-space path); every *registered* statistic is
+property-checked against the soundness contract the LAMP staging relies on
+(stats/base.py): min_attainable_pvalue really lower-bounds every attainable
+P-value, and count_thresholds is monotone non-decreasing on [1, N_pos+1].
+Hypothesis drives the property tests when available; a seeded sweep covers
+the same properties otherwise.
+"""
+
+import numpy as np
+import pytest
+
+from repro.stats import (
+    STATISTICS,
+    chi2_pvalue,
+    chi2_pvalue_jnp,
+    fisher_pvalue,
+    get_statistic,
+    register_statistic,
+)
+from repro.stats.base import TestStatistic
+
+scipy_stats = pytest.importorskip("scipy.stats")
+
+
+def margins(N, N_pos, x, n):
+    """Clamp (x, n) to a valid 2x2 table for the given margins."""
+    x = max(0, min(x, N))
+    n = max(max(0, x - (N - N_pos)), min(n, x, N_pos))
+    return x, n
+
+
+def oracle_chi2(x, n, N, N_pos):
+    """Independent path: Yates T + chi-square-distribution tail (scipy)."""
+    a, b = n, x - n
+    c, d = N_pos - n, N - N_pos - x + n
+    num = abs(a * d - b * c) - N / 2.0
+    denom = (a + b) * (c + d) * (a + c) * (b + d)
+    t = N * max(num, 0.0) ** 2 / denom if denom > 0 else 0.0
+    p_two = scipy_stats.chi2.sf(t, df=1)
+    enriched = a * d - b * c > 0
+    return p_two / 2.0 if enriched else 1.0 - p_two / 2.0
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_lookup_and_unknown_name():
+    assert {"fisher", "chi2"} <= set(STATISTICS)
+    assert get_statistic("fisher").name == "fisher"
+    assert get_statistic("chi2").name == "chi2"
+    with pytest.raises(ValueError, match="unknown test statistic.*fisher"):
+        get_statistic("mann-whitney")
+
+
+def test_register_requires_name():
+    class Nameless(TestStatistic):
+        name = ""
+
+        def pvalue(self, x, n, N, N_pos):  # pragma: no cover - never called
+            raise NotImplementedError
+
+        pvalue_device = min_attainable_pvalue = count_thresholds = pvalue
+
+    with pytest.raises(ValueError, match="non-empty"):
+        register_statistic(Nameless())
+
+
+def test_core_fisher_shim_reexports_same_objects():
+    """The legacy import path must stay alive and alias the moved functions."""
+    from repro.core import fisher as shim
+    from repro.stats import fisher as moved
+
+    for name in ("fisher_pvalue", "min_attainable_pvalue",
+                 "lamp_count_thresholds", "fisher_pvalue_jnp",
+                 "min_attainable_pvalue_jnp", "log_comb"):
+        assert getattr(shim, name) is getattr(moved, name)
+    assert get_statistic("fisher").pvalue(10, 8, 60, 20)[0] == \
+        fisher_pvalue(10, 8, 60, 20)[0]
+
+
+# ------------------------------------------------------------- chi2 vs scipy
+def test_chi2_matches_scipy_oracle_grid():
+    N, N_pos = 60, 20
+    for x in range(0, N + 1, 3):
+        for n_raw in range(0, N_pos + 1, 2):
+            x2, n = margins(N, N_pos, x, n_raw)
+            got = chi2_pvalue(x2, n, N, N_pos)[0]
+            want = oracle_chi2(x2, n, N, N_pos)
+            assert got == pytest.approx(want, rel=1e-10, abs=1e-300), (x2, n)
+
+
+def test_chi2_matches_scipy_oracle_random_margins():
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        N = int(rng.integers(2, 2000))
+        N_pos = int(rng.integers(1, N))
+        x, n = margins(N, N_pos, int(rng.integers(0, N + 1)),
+                       int(rng.integers(0, N_pos + 1)))
+        got = chi2_pvalue(x, n, N, N_pos)[0]
+        want = oracle_chi2(x, n, N, N_pos)
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-300), (N, N_pos, x, n)
+
+
+def test_chi2_log_space_survives_the_deep_tail():
+    """At GWAS scales T reaches the thousands; sf() — and even scipy's
+    chi2.logsf, which is log(sf) — is 0/-inf there.  Our log-space path
+    must agree with the Mills-ratio asymptotic expansion of the normal
+    tail:  log sf(z) ~ -z^2/2 - log(z) - log(2*pi)/2 + log1p(-1/z^2 + 3/z^4)."""
+    from scipy.special import log_ndtr
+
+    N, N_pos = 12000, 4000
+    x = np.array([3000])
+    n = np.array([3000])  # all support in positives: extreme enrichment
+    num = n * N - x * N_pos
+    denom = x * (N - x) * N_pos * (N - N_pos)
+    t = N * (np.abs(num) - N / 2.0) ** 2 / denom
+    z = np.sqrt(t[0])
+    want_log = (-z * z / 2 - np.log(z) - 0.5 * np.log(2 * np.pi)
+                + np.log1p(-1 / z**2 + 3 / z**4))
+    got_log = log_ndtr(-np.sqrt(t))[0]
+    assert got_log == pytest.approx(want_log, rel=1e-9)
+    assert want_log < -700  # genuinely beyond float64 sf territory
+    assert scipy_stats.chi2.logsf(t[0], df=1) == -np.inf  # why sf is no oracle
+    # the clipped host P-value stays a positive subnormal-free float
+    p = chi2_pvalue(x, n, N, N_pos)[0]
+    assert 0.0 < p <= np.exp(-745.0) * 1.01
+
+
+def test_chi2_device_matches_host_float32():
+    N, N_pos = 300, 100
+    rng = np.random.default_rng(3)
+    xs, ns = [], []
+    for _ in range(64):
+        x, n = margins(N, N_pos, int(rng.integers(0, N + 1)),
+                       int(rng.integers(0, N_pos + 1)))
+        xs.append(x)
+        ns.append(n)
+    host = chi2_pvalue(np.array(xs), np.array(ns), N, N_pos)
+    dev = np.asarray(chi2_pvalue_jnp(np.array(xs), np.array(ns), N, N_pos))
+    assert np.allclose(dev, np.clip(host, np.exp(-87.0), 1.0), rtol=2e-4)
+
+
+def test_chi2_null_and_degenerate_tables():
+    N, N_pos = 50, 25
+    # observed == expected (and inside the continuity band): p = 0.5
+    assert chi2_pvalue(10, 5, N, N_pos)[0] == pytest.approx(0.5)
+    # degenerate margins: denominator 0 -> T = 0 -> p = 0.5
+    assert chi2_pvalue(0, 0, N, N_pos)[0] == pytest.approx(0.5)
+    assert chi2_pvalue(N, N_pos, N, N_pos)[0] == pytest.approx(0.5)
+    # enrichment below expectation lands in the upper half
+    assert chi2_pvalue(20, 2, N, N_pos)[0] > 0.5
+
+
+# -------------------------------------------- contract: every registered stat
+def check_lower_bound(stat, N, N_pos, x, n):
+    x, n = margins(N, N_pos, x, n)
+    p = float(stat.pvalue(x, n, N, N_pos)[0])
+    f = float(np.asarray(stat.min_attainable_pvalue(np.array([x]), N, N_pos))[0])
+    assert f <= p * (1 + 1e-9) + 1e-300, \
+        f"{stat.name}: f({x})={f} exceeds p({x},{n})={p} [N={N}, N_pos={N_pos}]"
+
+
+def check_thresholds_monotone(stat, N, N_pos, alpha):
+    thr = np.asarray(stat.count_thresholds(N, N_pos, alpha), dtype=np.float64)
+    assert thr.shape == (N + 2,)
+    cap = min(N_pos + 1, N + 1)
+    window = thr[1: cap + 1]
+    assert np.all(np.diff(window) >= -1e-9 * np.abs(window[:-1])), \
+        f"{stat.name}: thresholds not monotone on [1, {cap}]"
+    assert np.all(np.isinf(thr[cap + 1:]))
+
+
+@pytest.mark.parametrize("name", sorted(STATISTICS))
+def test_statistic_contract_seeded_sweep(name):
+    stat = get_statistic(name)
+    rng = np.random.default_rng(11)
+    for _ in range(60):
+        N = int(rng.integers(2, 400))
+        N_pos = int(rng.integers(1, N))
+        check_lower_bound(stat, N, N_pos, int(rng.integers(0, N + 1)),
+                          int(rng.integers(0, N_pos + 1)))
+    for N, N_pos in ((10, 3), (60, 20), (97, 13), (300, 150)):
+        for alpha in (0.05, 0.01):
+            check_thresholds_monotone(stat, N, N_pos, alpha)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests degrade to the seeded sweep above
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=80, deadline=None)
+    @given(
+        name=st.sampled_from(sorted(STATISTICS)),
+        N=st.integers(min_value=2, max_value=600),
+        data=st.data(),
+    )
+    def test_min_attainable_is_a_lower_bound(name, N, data):
+        N_pos = data.draw(st.integers(min_value=1, max_value=N - 1))
+        x = data.draw(st.integers(min_value=0, max_value=N))
+        n = data.draw(st.integers(min_value=0, max_value=min(x, N_pos)))
+        check_lower_bound(get_statistic(name), N, N_pos, x, n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        name=st.sampled_from(sorted(STATISTICS)),
+        N=st.integers(min_value=2, max_value=600),
+        alpha=st.floats(min_value=1e-6, max_value=0.5),
+        data=st.data(),
+    )
+    def test_count_thresholds_monotone_on_tarone_window(name, N, alpha, data):
+        N_pos = data.draw(st.integers(min_value=1, max_value=N - 1))
+        check_thresholds_monotone(get_statistic(name), N, N_pos, alpha)
