@@ -12,58 +12,93 @@ CPU wall-clock says nothing about TPU kernels, so this benchmark reports the
       flops = 4*B*H*Sq*Skv*D (QK^T + PV)
       bytes = streaming KV once per q-block row + resident q/acc
 
-plus interpret-mode numerical verification against the jnp oracle at every
+plus interpret-mode numerical verification against the numpy oracle at every
 reported configuration (correctness and the perf claim travel together).
+
+Block sizes come from the support-count autotuner (DESIGN.md §8) — the same
+`choose_blocks` that RuntimeConfig.resolve pins into every compiled mine —
+so the roofline reports the configurations that actually run.  `run()` also
+measures a small autotune sweep (timed through the public op on the active
+backend) and saves it as `autotune_seed.json`, the seed-table artifact CI
+uploads; point `REPRO_SC_AUTOTUNE` at it to carry measured tunings into
+later processes.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.bitmap import supports_np
+from repro.kernels.support_count import autotune
 from repro.kernels.support_count.ops import support_counts
-from repro.kernels.support_count.ref import support_count_ref
 
 from .common import save_json
 
-VPU_INT_OPS = 4.8e12  # v5e vector int ops/s (8x128 lanes, ~940 MHz, 4 ALUs)
+VPU_INT_OPS = autotune.VPU_INT_OPS  # v5e 8x128 lanes, ~940 MHz, 4 ALUs
 PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+HBM_BW = autotune.HBM_BW
 VMEM_BYTES = 16 * 2**20
+
+#: Table-1-like support-count sweep shapes (B = expand batch per superstep)
+PAPER_SHAPES = [
+    (64, 11914, 22),    # hapmap_dom_20-like
+    (64, 91126, 12),    # alz_dom_10-like
+    (256, 250120, 12),  # alz_rec_30-like
+    (64, 397, 400),     # mcf7-like (many transactions)
+]
 
 
 def support_count_report():
     rows = []
-    for b, m, w, bb, bm, bw in [
-        (64, 11914, 22, 8, 512, 8),      # hapmap_dom_20-like
-        (64, 91126, 12, 8, 512, 8),      # alz_dom_10-like
-        (256, 250120, 12, 16, 1024, 8),  # alz_rec_30-like
-        (64, 397, 400, 8, 128, 64),      # mcf7-like (many transactions)
-    ]:
-        w_pad = -(-w // bw) * bw
-        m_pad = -(-m // bm) * bm
-        words = b * m_pad * w_pad
+    for b, m, w in PAPER_SHAPES:
+        bb, bm, bw = autotune.choose_blocks(b, m, w, "pallas")
+        bp, mp, wp = autotune.bucket_dims(b, m, w)
+        words = bp * mp * wp
         int_ops = 3 * words  # AND + popcount + accumulate
-        bytes_hbm = (b * w_pad + w_pad * m_pad) * 4 + b * m_pad * 4
+        bytes_hbm = (bp * wp + wp * mp) * 4 + bp * mp * 4
         t_compute = int_ops / VPU_INT_OPS
         t_memory = bytes_hbm / HBM_BW
-        vmem = (bb * bw + bw * bm + bb * bm + bb * bw * bm) * 4
-        # interpret-mode correctness at a scaled shape
+        vmem = autotune.vmem_bytes(bb, bm, bw)
+        # interpret-mode correctness at a scaled shape, same blocks family
         rng = np.random.default_rng(0)
         occ = rng.integers(0, 2**32, size=(min(b, 16), w), dtype=np.uint32)
-        db_t = rng.integers(0, 2**32, size=(w, min(m, 1024)), dtype=np.uint32)
-        got = np.asarray(support_counts(occ, db_t, block_b=8, block_m=min(bm, 512),
-                                        block_w=min(bw, 32), interpret=True))
-        ok = np.array_equal(got, np.asarray(support_count_ref(occ, db_t)))
+        db = rng.integers(0, 2**32, size=(min(m, 1024), w), dtype=np.uint32)
+        got = np.asarray(
+            support_counts(occ, db, impl="pallas_interpret",
+                           blocks=(8, min(bm, 512), min(bw, 32)))
+        )
+        ok = np.array_equal(got, supports_np(occ, db))
         rows.append({
             "shape": f"B{b} M{m} W{w}", "block": f"{bb}x{bm}x{bw}",
+            "autotuned": True,
             "int_ops": int_ops, "bytes": bytes_hbm,
             "t_compute_us": t_compute * 1e6, "t_memory_us": t_memory * 1e6,
+            "modeled_us": autotune.modeled_time_us(b, m, w, (bb, bm, bw)),
             "bound": "compute" if t_compute > t_memory else "memory",
             "arith_intensity_ops_per_byte": int_ops / bytes_hbm,
             "vmem_per_step_kib": vmem / 1024,
             "fits_vmem": vmem < VMEM_BYTES,
             "verified_vs_oracle": bool(ok),
         })
+    return rows
+
+
+def autotune_sweep(shapes=None, max_candidates: int = 4, iters: int = 2):
+    """Measure candidate blocks through the public op; returns seed rows.
+
+    On CPU this times the interpreted kernel — meaningless for TPU placement
+    but a consistent ordering for CPU CI (where pallas_interpret carries
+    mines); on TPU it measures the real kernel.  Shapes default to a small
+    bucket family so the sweep stays cheap enough for the slow-system job.
+    """
+    if shapes is None:
+        shapes = [(16, 512, 8), (16, 2048, 8), (16, 4096, 22)]
+    rows = []
+    for b, m, w in shapes:
+        rows.extend(autotune.measure_blocks(
+            b, m, w, impl="pallas_interpret",
+            iters=iters, max_candidates=max_candidates,
+        ))
     return rows
 
 
@@ -92,9 +127,18 @@ def flash_attention_report():
 
 
 def run():
+    import os
+
+    from .common import BENCH_DIR
+
+    sweep = autotune_sweep()
     out = {
         "support_count": support_count_report(),
         "flash_attention": flash_attention_report(),
+        "autotune_sweep": sweep,
     }
-    save_json("kernel_roofline.json", out)
+    save_json("kernel_roofline.json", out)  # also creates BENCH_DIR
+    # the seed-table artifact: feed back via REPRO_SC_AUTOTUNE or
+    # autotune.load_seed_table to make measured blocks win over the model
+    autotune.save_seed_table(os.path.join(BENCH_DIR, "autotune_seed.json"), sweep)
     return out

@@ -16,12 +16,15 @@ scaling transactions up (scale_trans) silently multiplied stack bytes.
 Resolution uses bucket dims, not exact dims, so same-bucket datasets
 resolve to the same EngineConfig and share compiled programs.
 
-Two knobs resolve to backend-/bucket-concrete values here and therefore
-land in the program cache key: `kernel_impl="auto"` becomes "pallas" on TPU
-and "ref" elsewhere (`repro.core.expand.resolve_kernel_impl`), and
-`sync_period` — the superstep interval between lambda/histogram syncs
-(DESIGN.md §6) — passes through verbatim, so sessions with different sync
-cadences never share a compiled superstep program.
+Three knobs resolve to backend-/bucket-concrete values here and therefore
+land in the program cache key: `kernel_impl="auto"` becomes "pallas" on
+TPU, "pallas_gpu" on GPU, "ref" elsewhere (the dispatch point's
+`resolve_impl`); `kernel_blocks=None` becomes the autotuner's (block_b,
+block_m, block_w) triple for (expand_batch, bucket tile, bucket words) —
+see kernels/support_count/autotune (DESIGN.md §8); and `sync_period` — the
+superstep interval between lambda/histogram syncs (DESIGN.md §6) — passes
+through verbatim, so sessions with different sync cadences never share a
+compiled superstep program.
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ from dataclasses import dataclass, fields, replace
 
 from repro.core.engine import EngineConfig
 from repro.core.expand import resolve_kernel_impl
+from repro.kernels.support_count import autotune
 
 from .dataset import ShapeBucket
 
@@ -59,8 +63,12 @@ class RuntimeConfig:
     n_random_perms: int = 4
     seed: int = 0
     steal_enabled: bool = True
-    kernel_impl: str = "auto"      # "auto" (pallas on TPU, ref elsewhere) |
-    #                                "ref" | "pallas" | "pallas_interpret"
+    kernel_impl: str = "auto"      # "auto" (pallas on TPU, pallas_gpu on GPU,
+    #                                ref elsewhere) | any ops.VALID_IMPLS name
+    #: (block_b, block_m, block_w) for the Pallas kernel; None = let the
+    #: autotuner choose per (expand_batch, bucket tile, bucket words) at
+    #: resolve time — the resolved triple joins the program cache key
+    kernel_blocks: tuple[int, int, int] | None = None
     trace_cap: int = 0
     sync_period: int = 4           # supersteps between lambda/histogram syncs
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
@@ -95,6 +103,14 @@ class RuntimeConfig:
             mem_cap = (self.stack_mem_mb * 2**20) // node_bytes
             floor = 2 * (self.push_cap + self.steal_max + self.expand_batch)
             cap = max(min(cap, mem_cap), floor)
+        impl = resolve_kernel_impl(self.kernel_impl)
+        blocks = self.kernel_blocks
+        if blocks is None and impl != "ref":
+            # pin the autotuned triple: the per-tile sweep shape is
+            # (expand_batch, bucket tile, bucket words)
+            blocks = autotune.choose_blocks(
+                self.expand_batch, bucket.tile, bucket.words, impl
+            )
         return EngineConfig(
             expand_batch=self.expand_batch,
             stack_cap=int(cap),
@@ -105,9 +121,11 @@ class RuntimeConfig:
             n_random_perms=self.n_random_perms,
             seed=self.seed,
             steal_enabled=self.steal_enabled,
-            # "auto" resolves here — per backend — so the resolved config
-            # (and with it the session's program cache key) is concrete
-            kernel_impl=resolve_kernel_impl(self.kernel_impl),
+            # "auto" impl and None blocks resolve here — per backend and
+            # bucket — so the resolved config (and with it the session's
+            # program cache key) is concrete
+            kernel_impl=impl,
+            kernel_blocks=blocks,
             trace_cap=self.trace_cap,
             sync_period=self.sync_period,
         )

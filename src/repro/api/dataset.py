@@ -23,7 +23,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.engine import PackedProblem, pack_problem
+from repro.core.bitmap import DEFAULT_ITEM_TILE, item_tiling
+from repro.core.engine import PackedProblem, pack_problem, pack_problem_from_bits
 
 __all__ = [
     "BucketPolicy",
@@ -36,11 +37,29 @@ __all__ = [
 
 @dataclass(frozen=True)
 class ShapeBucket:
-    """Program dims a dataset is padded to — the shape half of a cache key."""
+    """Program dims a dataset is padded to — the shape half of a cache key.
+
+    `item_tile` is the item-axis tile width of the device database layout
+    (DESIGN.md §8): 0 means one tile spanning all `items` (every pre-tiling
+    bucket; zero layout overhead), nonzero means `items` is a multiple of it
+    and the program sweeps `items / item_tile` tiles.  It shapes the traced
+    program, so it is part of the bucket — and thereby of the cache key.
+    """
 
     transactions: int  # n_pad
     positives: int     # npos_pad
-    items: int         # m_pad
+    items: int         # m_pad (a multiple of item_tile when tiled)
+
+    item_tile: int = 0  # 0 = single tile of width `items`
+
+    @property
+    def tile(self) -> int:
+        """Concrete tile width (the kernel's per-sweep item extent)."""
+        return self.item_tile or self.items
+
+    @property
+    def n_tiles(self) -> int:
+        return self.items // self.tile if self.items else 1
 
     @property
     def words(self) -> int:
@@ -65,6 +84,11 @@ class BucketPolicy:
     min_items: int = 64
     growth: float = 2.0
     exact: bool = False
+    #: item-tile width cap: item dims past this are stored tiled (rounded up
+    #: to a tile multiple) so paper-scale databases sweep in [B, item_tile]
+    #: chunks.  Applies to exact buckets too — tiling is a layout property,
+    #: not a padding policy.
+    item_tile: int = DEFAULT_ITEM_TILE
 
     def _round(self, value: int, floor: int) -> int:
         if value <= floor:
@@ -74,11 +98,17 @@ class BucketPolicy:
 
     def bucket_for(self, n: int, n_pos: int, m: int) -> ShapeBucket:
         if self.exact:
-            return ShapeBucket(transactions=n, positives=n_pos, items=m)
+            m_pad, tile = item_tiling(m, self.item_tile)
+            return ShapeBucket(
+                transactions=n, positives=n_pos, items=m_pad,
+                item_tile=tile if m_pad > tile else 0,
+            )
+        m_pad, tile = item_tiling(self._round(m, self.min_items), self.item_tile)
         return ShapeBucket(
             transactions=self._round(n, self.min_transactions),
             positives=self._round(n_pos, self.min_positives),
-            items=self._round(m, self.min_items),
+            items=m_pad,
+            item_tile=tile if m_pad > tile else 0,
         )
 
 
@@ -130,6 +160,7 @@ class Dataset:
             n_pad=bucket.transactions,
             npos_pad=bucket.positives,
             m_pad=bucket.items,
+            m_tile=bucket.tile,
         )
 
     # ------------------------------------------------------------ properties
@@ -173,6 +204,62 @@ class Dataset:
         """Prepare a dense [transactions, items] bool matrix."""
         return cls(db_bool, labels, item_names=item_names, name=name,
                    bucket_policy=bucket_policy, planted=planted)
+
+    @classmethod
+    def from_packed_words(
+        cls,
+        db_bits: np.ndarray,
+        labels: np.ndarray | None = None,
+        *,
+        n_transactions: int,
+        item_names=None,
+        name: str = "packed",
+        bucket_policy: BucketPolicy = DEFAULT_BUCKETS,
+        planted=None,
+    ) -> "Dataset":
+        """Prepare an already word-packed [items, words] uint32 database.
+
+        The paper-scale entry: `data.synthetic.paper_problem_packed`
+        generates alz_rec_30 (250k items) straight into packed words, and
+        this constructor tiles them without ever materializing the dense
+        [transactions, items] bool matrix.  `n_transactions` cannot be
+        recovered from packed words, so it is required.
+        """
+        db_bits = np.asarray(db_bits, dtype=np.uint32)
+        if db_bits.ndim != 2:
+            raise ValueError(f"db_bits must be [items, words], got {db_bits.shape}")
+        m = db_bits.shape[0]
+        n = int(n_transactions)
+        if labels is not None:
+            labels = np.asarray(labels, dtype=bool)
+            if labels.shape != (n,):
+                raise ValueError(f"labels must be [{n}], got {labels.shape}")
+            labels = labels.copy()
+            labels.flags.writeable = False
+        if item_names is not None:
+            item_names = tuple(str(s) for s in item_names)
+            if len(item_names) != m:
+                raise ValueError(
+                    f"item_names has {len(item_names)} entries for {m} items"
+                )
+        n_pos = int(labels.sum()) if labels is not None else max(1, n // 2)
+        bucket = bucket_policy.bucket_for(n, n_pos, m)
+        ds = cls.__new__(cls)
+        ds.name = str(name)
+        ds.labels = labels
+        ds.item_names = item_names
+        ds.planted = planted
+        ds.bucket = bucket
+        ds.packed = pack_problem_from_bits(
+            db_bits,
+            labels,
+            n=n,
+            n_pad=bucket.transactions,
+            npos_pad=bucket.positives,
+            m_pad=bucket.items,
+            m_tile=bucket.tile,
+        )
+        return ds
 
     @classmethod
     def from_transactions(

@@ -33,6 +33,13 @@ class PhaseReport:
     steal_rounds: int          # hunger-gated exchange rounds that executed
     emit_dropped: int          # pattern records lost to out_cap saturation
     output: MineOutput = field(repr=False)  # full raw telemetry
+    # kernel provenance (DESIGN.md §8) — the *resolved* support-count
+    # dispatch this pass actually ran with, so a committed number can never
+    # silently come from a different kernel than claimed:
+    kernel_impl: str = "ref"   # concrete ops.VALID_IMPLS name (never "auto")
+    kernel_blocks: "tuple[int, int, int] | None" = None  # autotuned (bb, bm, bw)
+    item_tile: int = 0         # tile width of the db layout (0 = untiled legacy)
+    n_item_tiles: int = 1      # tiles per support-count sweep
 
     @property
     def stats(self):
@@ -67,6 +74,23 @@ class MineReport:
     def cold(self) -> bool:
         """True when any phase had to compile (first query of its bucket)."""
         return any(not p.cache_hit for p in self.phases)
+
+    @property
+    def kernel_impl(self) -> str:
+        """Resolved support-count kernel that carried the expand path.
+
+        All phases of one query resolve identically (same session runtime,
+        same bucket), so the first phase speaks for the query.
+        """
+        return self.phases[0].kernel_impl if self.phases else "ref"
+
+    @property
+    def kernel_blocks(self) -> "tuple[int, int, int] | None":
+        return self.phases[0].kernel_blocks if self.phases else None
+
+    @property
+    def item_tile(self) -> int:
+        return self.phases[0].item_tile if self.phases else 0
 
     def summary(self) -> str:
         import math

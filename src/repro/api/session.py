@@ -263,6 +263,10 @@ class MinerSession:
             steal_rounds=int(out.stats["steal_rounds"][0]),
             emit_dropped=out.emit_dropped,
             output=out,
+            kernel_impl=cfg.kernel_impl,
+            kernel_blocks=cfg.kernel_blocks,
+            item_tile=dataset.bucket.item_tile,
+            n_item_tiles=dataset.bucket.n_tiles,
         )
 
     # --------------------------------------------------------------- queries

@@ -13,9 +13,21 @@ the word-parallel popcount to (8,128) vector registers:
 
 `supports_ref` here is the pure-jnp oracle; the Pallas kernel in
 repro.kernels.support_count implements the same contraction with VMEM tiling.
+
+Item-tiled layout (DESIGN.md §8): at paper scale the item axis is the one
+that grows (Table 1 tops out at 250k items against a few hundred
+transactions), so the database is carried as a `BitmapLayout` — `db_bits`
+reshaped into item-axis tiles `[T, m_tile, W]` with an all-zero padded tail.
+One array threads through the whole engine (the old `db_mw`/`db_wm` twin
+arrays are gone); the support-count op sweeps it tile by tile so the
+per-superstep working set is `[B, m_tile]`-sized regardless of total items,
+and the flat `[m_pad, W]` view is a free reshape for host-side code
+(root dealing, closure reconstruction).
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -24,8 +36,18 @@ import jax.numpy as jnp
 
 WORD_BITS = 32
 
+#: default item-tile width: the support-count kernel sweep processes at most
+#: this many item columns at once.  4096 lanes keeps a [B=16, m_tile] int32
+#: output block + a [m_tile, W] tile comfortably inside one TPU core's VMEM
+#: at every Table-1 word width, while one tile covers every toy problem
+#: (m <= 4096 stays single-tile: zero layout overhead, legacy shapes).
+DEFAULT_ITEM_TILE = 4096
+
 __all__ = [
     "WORD_BITS",
+    "DEFAULT_ITEM_TILE",
+    "BitmapLayout",
+    "item_tiling",
     "num_words",
     "pack_db",
     "unpack_occ",
@@ -40,6 +62,104 @@ __all__ = [
 
 def num_words(n_transactions: int) -> int:
     return (n_transactions + WORD_BITS - 1) // WORD_BITS
+
+
+def item_tiling(m: int, max_tile: int = DEFAULT_ITEM_TILE) -> tuple[int, int]:
+    """(m_pad, m_tile) for an m-item axis: single tile for small m (zero
+    padding overhead, legacy program shapes), else m rounded up to a
+    multiple of `max_tile` (padded tail items are all-zero columns)."""
+    if m <= max_tile:
+        return m, m
+    n_tiles = -(-m // max_tile)
+    return n_tiles * max_tile, max_tile
+
+
+@dataclass(frozen=True)
+class BitmapLayout:
+    """Item-axis-tiled packed database: `tiles[t, r, w]` is word w of item
+    `t * m_tile + r`.  The canonical device carrier of the transaction
+    database (DESIGN.md §8): one array replaces the old item-major /
+    word-major twin copies, and every support-count path (engine expand,
+    host reconstruction, benchmarks) sweeps it through the same kernel
+    dispatch in `repro.kernels.support_count.ops`.
+
+    Items at positions >= `m` (the padded tail of the last tile) are
+    all-zero columns: zero support, never accepted, counted, emitted, or
+    extended — results are invariant to the tile padding, exactly like
+    bucket padding (DESIGN.md §5).
+    """
+
+    tiles: np.ndarray  # [T, m_tile, W] uint32, read-only
+    m: int             # actual item count (tail beyond m is zero padding)
+
+    def __post_init__(self):
+        if self.tiles.ndim != 3:
+            raise ValueError(f"tiles must be [T, m_tile, W], got {self.tiles.shape}")
+        if not (0 <= self.m <= self.m_pad):
+            raise ValueError(f"m={self.m} outside [0, {self.m_pad}]")
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def m_tile(self) -> int:
+        return self.tiles.shape[1]
+
+    @property
+    def w(self) -> int:
+        return self.tiles.shape[2]
+
+    @property
+    def m_pad(self) -> int:
+        return self.tiles.shape[0] * self.tiles.shape[1]
+
+    @property
+    def flat(self) -> np.ndarray:
+        """[m_pad, W] item-major view (a reshape — no copy)."""
+        return self.tiles.reshape(self.m_pad, self.w)
+
+    def tail_mask(self) -> np.ndarray:
+        """[m_pad] bool: True for real items, False for the padded tail."""
+        return np.arange(self.m_pad) < self.m
+
+    @classmethod
+    def from_db_bits(
+        cls,
+        db_bits: np.ndarray,
+        *,
+        m: int | None = None,
+        m_tile: int | None = None,
+        m_pad: int | None = None,
+    ) -> "BitmapLayout":
+        """Tile an item-major [M, W] packed database.
+
+        `m` is the actual item count (default: all M rows are real items);
+        `m_pad`/`m_tile` fix the padded extent and tile width (defaults via
+        `item_tiling`).  `m_pad` must be a multiple of `m_tile`.
+        """
+        db_bits = np.asarray(db_bits, dtype=np.uint32)
+        rows, w = db_bits.shape
+        m = rows if m is None else m
+        if m_pad is None and m_tile is None:
+            m_pad, m_tile = item_tiling(max(rows, 1))
+        elif m_tile is None:
+            m_pad2, m_tile = item_tiling(m_pad)
+            if m_pad2 != m_pad:
+                raise ValueError(
+                    f"m_pad={m_pad} is not a multiple of the default tile "
+                    f"{m_tile}; pass m_tile explicitly"
+                )
+        elif m_pad is None:
+            m_pad = -(-max(rows, 1) // m_tile) * m_tile
+        if m_pad % m_tile != 0:
+            raise ValueError(f"m_pad={m_pad} not a multiple of m_tile={m_tile}")
+        if m_pad < rows:
+            raise ValueError(f"m_pad={m_pad} smaller than db_bits rows={rows}")
+        tiles = np.zeros((m_pad // m_tile, m_tile, w), dtype=np.uint32)
+        tiles.reshape(m_pad, w)[:rows] = db_bits
+        tiles.flags.writeable = False
+        return cls(tiles=tiles, m=m)
 
 
 def pack_db(db_bool: np.ndarray) -> np.ndarray:

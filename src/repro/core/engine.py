@@ -80,7 +80,15 @@ from jax.sharding import PartitionSpec as P
 from repro.stats import get_statistic
 
 from . import collectives
-from .bitmap import full_occ, num_words, pack_db, supports_np
+from .bitmap import (
+    DEFAULT_ITEM_TILE,
+    BitmapLayout,
+    full_occ,
+    item_tiling,
+    num_words,
+    pack_db,
+    supports_np,
+)
 from .collectives import MINERS_AXIS
 from .expand import build_expand
 from .global_sync import build_global_sync, hunger_census, recompute_lambda
@@ -107,7 +115,11 @@ class EngineConfig:
     n_random_perms: int = 4
     seed: int = 0
     steal_enabled: bool = True     # False = the paper's "naive approach" (§5.4)
-    kernel_impl: str = "auto"      # "auto" | "ref" | "pallas" | "pallas_interpret"
+    kernel_impl: str = "auto"      # "auto" | kernels/support_count/ops.VALID_IMPLS
+    #: resolved (block_b, block_m, block_w) for the Pallas kernel; None lets
+    #: the autotuner choose at trace time.  RuntimeConfig.resolve pins the
+    #: tuned triple here so it joins the compiled-program cache key.
+    kernel_blocks: tuple[int, int, int] | None = None
     trace_cap: int = 0             # >0: record popped-per-superstep [trace_cap]
     sync_period: int = 4           # supersteps between lambda/histogram syncs
 
@@ -159,10 +171,14 @@ class PackedProblem:
     bits, so they have zero support and can never be accepted, counted,
     emitted, or generate children — results are invariant to the padding
     (DESIGN.md §5).
+
+    The database is carried as one item-tiled `BitmapLayout` (DESIGN.md §8):
+    `db_tiles` [T, m_tile, W] is what the device program takes, `db_bits`
+    [m_pad, W] is its free item-major reshape for host-side code.  `m_pad`
+    (the program item dim) always equals `layout.m_pad` == T * m_tile.
     """
 
-    db_bits: np.ndarray    # [m_pad, w_pad] u32 packed item columns
-    db_bits_t: np.ndarray  # [w_pad, m_pad] u32 contiguous transpose
+    layout: BitmapLayout   # item-tiled packed DB; layout.m_pad == m_pad
     pos_mask: np.ndarray   # [w_pad] u32 positive-transaction bitmap
     occ0: np.ndarray       # [w_pad] u32 root occurrence (all actual transactions)
     n: int                 # actual transactions
@@ -170,12 +186,32 @@ class PackedProblem:
     m: int                 # actual items
     n_pad: int             # bucket transactions (program dim)
     npos_pad: int          # bucket positives (program dim)
-    m_pad: int             # bucket items (program dim)
+    m_pad: int             # bucket items, tile-aligned (program dim)
     has_labels: bool = True
+
+    def __post_init__(self):
+        if self.layout.m_pad != self.m_pad:
+            raise ValueError(
+                f"m_pad={self.m_pad} != layout.m_pad={self.layout.m_pad}"
+            )
+
+    @property
+    def db_tiles(self) -> np.ndarray:
+        """[T, m_tile, w_pad] — the device program's database argument."""
+        return self.layout.tiles
+
+    @property
+    def db_bits(self) -> np.ndarray:
+        """[m_pad, w_pad] item-major view (host-side: root deal, closures)."""
+        return self.layout.flat
+
+    @property
+    def m_tile(self) -> int:
+        return self.layout.m_tile
 
     @property
     def w_pad(self) -> int:
-        return self.db_bits.shape[1]
+        return self.layout.w
 
 
 def pack_problem(
@@ -185,12 +221,17 @@ def pack_problem(
     n_pad: int | None = None,
     npos_pad: int | None = None,
     m_pad: int | None = None,
+    m_tile: int | None = None,
 ) -> PackedProblem:
     """Pack the bool matrix exactly once, padding to the given program dims.
 
     Defaults pad to the exact dataset shape (the legacy one-shot path);
     `repro.api.Dataset` passes its shape-bucket dims so same-bucket datasets
     produce identically-shaped arguments and share compiled programs.
+
+    `m_tile` caps the item-tile width (default `DEFAULT_ITEM_TILE`): the
+    item dim is rounded up to a tile multiple when it exceeds one tile, and
+    the program item dim becomes that tile-aligned extent.
     """
     db_bool = np.asarray(db_bool, dtype=bool)
     n, m = db_bool.shape
@@ -207,11 +248,52 @@ def pack_problem(
             f"bucket dims ({n_pad}, {npos_pad}, {m_pad}) smaller than dataset "
             f"({n}, {n_pos}, {m})"
         )
-    w_pad = num_words(n_pad)
-
     packed = pack_db(db_bool)  # [m, w]
-    db_bits = np.zeros((m_pad, w_pad), dtype=np.uint32)
-    db_bits[:m, : packed.shape[1]] = packed
+    return pack_problem_from_bits(
+        packed, labels, n=n, n_pad=n_pad, npos_pad=npos_pad, m_pad=m_pad,
+        m_tile=m_tile, n_pos=n_pos,
+    )
+
+
+def pack_problem_from_bits(
+    db_bits: np.ndarray,
+    labels: np.ndarray | None = None,
+    *,
+    n: int,
+    n_pad: int | None = None,
+    npos_pad: int | None = None,
+    m_pad: int | None = None,
+    m_tile: int | None = None,
+    n_pos: int | None = None,
+) -> PackedProblem:
+    """`pack_problem` for an already word-packed [M, W] database.
+
+    The paper-scale entry (data/synthetic.py generates alz_rec_30 straight
+    into packed words — a dense [n, m] bool intermediate would be ~91 GB of
+    float draws upstream): no repacking, just zero-pad into the tiled layout.
+    `n` (actual transactions) cannot be recovered from packed words, so it
+    is required; `n_pos` defaults from `labels` (or n // 2 unlabeled).
+    """
+    db_bits = np.asarray(db_bits, dtype=np.uint32)
+    m, w = db_bits.shape
+    if labels is not None:
+        labels = np.asarray(labels, dtype=bool)
+        if n_pos is None:
+            n_pos = int(labels.sum())
+    elif n_pos is None:
+        n_pos = max(1, n // 2)
+    n_pad = n if n_pad is None else n_pad
+    npos_pad = n_pos if npos_pad is None else npos_pad
+    m_pad = m if m_pad is None else m_pad
+    w_pad = num_words(n_pad)
+    if w > w_pad:
+        raise ValueError(f"db_bits has {w} words but n_pad={n_pad} fits {w_pad}")
+    max_tile = DEFAULT_ITEM_TILE if m_tile is None else m_tile
+    m_pad, tile = item_tiling(max(m_pad, 1), max_tile)
+
+    padded = np.zeros((m, w_pad), dtype=np.uint32)
+    padded[:, :w] = db_bits
+    layout = BitmapLayout.from_db_bits(padded, m=m, m_tile=tile, m_pad=m_pad)
     pos_mask = np.zeros(w_pad, dtype=np.uint32)
     if labels is not None:
         pos_bits = pack_db(labels[:, None])[0]
@@ -219,11 +301,10 @@ def pack_problem(
     occ0 = np.zeros(w_pad, dtype=np.uint32)
     root = full_occ(n)
     occ0[: root.shape[0]] = root
-    for arr in (db_bits, pos_mask, occ0):
+    for arr in (pos_mask, occ0):
         arr.flags.writeable = False
     return PackedProblem(
-        db_bits=db_bits,
-        db_bits_t=np.ascontiguousarray(db_bits.T),
+        layout=layout,
         pos_mask=pos_mask,
         occ0=occ0,
         n=n, n_pos=n_pos, m=m,
@@ -285,13 +366,13 @@ def build_mine_step(
         nb=NB, mode=mode, sync_period=cfg.sync_period, axis=axis
     )
 
-    def body(carry, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act):
+    def body(carry, db_tiles, pos_mask, thr, delta, n_act, npos_act):
         (occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc, hist2d, lam,
          t, stats, out_occ, out_meta, out_ptr, n_sig, trace, _work) = carry
         popped_before = stats[Stat.POPPED]
         (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta, out_ptr,
          sig_cnt) = expand(
-            occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw, db_wm,
+            occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_tiles,
             pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act,
         )
         if cfg.trace_cap:
@@ -326,7 +407,7 @@ def build_mine_step(
                 hist2d, lam, t + 1, stats, out_occ, out_meta, out_ptr, n_sig,
                 trace, work)
 
-    def program(init_occ, init_meta, init_sp, db_mw, db_wm, pos_mask, thr,
+    def program(init_occ, init_meta, init_sp, db_tiles, pos_mask, thr,
                 lam0, delta, n_act, npos_act):
         # per-device views arrive with a leading length-1 shard axis
         occ_stack = init_occ[0]
@@ -360,7 +441,7 @@ def build_mine_step(
                  trace, work0)
         carry = lax.while_loop(
             cond_fn,
-            lambda c: body(c, db_mw, db_wm, pos_mask, thr, delta, n_act, npos_act),
+            lambda c: body(c, db_tiles, pos_mask, thr, delta, n_act, npos_act),
             carry,
         )
         (_, _, _, _, hist, _, _, hist2d, lam, t, stats, out_occ, out_meta,
@@ -407,7 +488,7 @@ def build_phase_program(
         mesh=mesh,
         in_specs=(
             P(MINERS_AXIS), P(MINERS_AXIS), P(MINERS_AXIS),  # stacks
-            P(), P(), P(), P(),  # db_mw, db_wm, pos_mask, thr
+            P(), P(), P(),  # db_tiles, pos_mask, thr
             P(), P(), P(), P(),  # lam0, delta, n_act, npos_act
         ),
         out_specs=(P(), P(), P(), P(MINERS_AXIS), P(MINERS_AXIS),
@@ -443,7 +524,7 @@ def make_phase_args(
     thr_pad[: thr.shape[0]] = thr
     args = (
         init_occ, init_meta, init_sp,
-        packed.db_bits, packed.db_bits_t, packed.pos_mask, thr_pad,
+        packed.db_tiles, packed.pos_mask, thr_pad,
         np.int32(start_sup), np.float32(delta),
         np.int32(packed.n), np.int32(packed.n_pos),
     )

@@ -17,18 +17,19 @@ always, so the host can filter down exactly).  Emissions past `out_cap` are
 dropped but *counted* in the emit_dropped stat so the host can warn.
 
 This phase is pure per-miner compute — no collectives — so it is the natural
-unit to retarget at an accelerator kernel: `supports_gemm` dispatches on
-`cfg.kernel_impl` between the jnp reference contraction and the Pallas
-popcount-GEMM (kernels/support_count); the default "auto" resolves per
-backend via `resolve_kernel_impl` (pallas on TPU, ref elsewhere).
+unit to retarget at an accelerator kernel: `supports_gemm` routes through the
+single dispatch point in kernels/support_count/ops (DESIGN.md §8), which
+selects ref / pallas / pallas_interpret / pallas_gpu per `cfg.kernel_impl`
+and sweeps the item-tiled database `[T, m_tile, W]` tile by tile — the
+per-superstep working set is `[B, m_tile]`-sized regardless of total items.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.support_count.ops import resolve_impl, support_counts_tiled
 from repro.stats import get_statistic
 
 from .deque import push_positions, top_indices
@@ -36,30 +37,15 @@ from .stats import Stat
 
 __all__ = ["resolve_kernel_impl", "supports_gemm", "build_expand"]
 
-
-def resolve_kernel_impl(impl: str, backend: str | None = None) -> str:
-    """Resolve the "auto" kernel selection against the active backend.
-
-    "auto" means: the Pallas popcount-GEMM on TPU, the jnp reference
-    contraction everywhere else.  Concrete names pass through untouched, so
-    explicit choices (incl. "pallas_interpret" for CPU testing) still win.
-    """
-    if impl != "auto":
-        return impl
-    backend = jax.default_backend() if backend is None else backend
-    return "pallas" if backend == "tpu" else "ref"
+# back-compat alias: the "auto" resolution now lives at the kernel dispatch
+# point (ops.resolve_impl) so every support-count caller shares it
+resolve_kernel_impl = resolve_impl
 
 
-def supports_gemm(occ_nodes, db_mw, db_wm, impl: str):
-    """[B, W] x [M, W] -> [B, M] support counts; impl selects the kernel."""
-    if impl == "ref":
-        inter = occ_nodes[:, None, :] & db_mw[None, :, :]
-        return jnp.sum(lax.population_count(inter), axis=-1).astype(jnp.int32)
-    from repro.kernels.support_count.ops import support_counts
-
-    return support_counts(
-        occ_nodes, db_wm, interpret=(impl == "pallas_interpret")
-    )
+def supports_gemm(occ_nodes, db_tiles, impl: str,
+                  blocks: tuple[int, int, int] | None = None):
+    """[B, W] x [T, m_tile, W] -> [B, T*m_tile] support counts (traced)."""
+    return support_counts_tiled(occ_nodes, db_tiles, impl=impl, blocks=blocks)
 
 
 def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
@@ -86,14 +72,20 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
     P-value to compare it against) — the plain closed-frequent objective:
     same traversal, no test.
 
-    expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
-           db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
-           npos_act)
+    The database arrives as one item-tiled array `db_tiles` [T, m_tile, W]
+    with T * m_tile == m (the program item dim; tile-tail items beyond the
+    dataset's real count are all-zero columns, excluded like any bucket
+    padding).  The kernel sweeps the tiles; host-style flat indexing
+    (child-occ gather) uses the free `[m, W]` reshape view.
+
+    expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_tiles,
+           pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act)
       -> (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta,
           out_ptr, sig_cnt)
     """
     B, CAP, C = cfg.expand_batch, cfg.stack_cap, cfg.push_cap
     kernel_impl = resolve_kernel_impl(cfg.kernel_impl)
+    kernel_blocks = getattr(cfg, "kernel_blocks", None)
     NB = n + 2
     testing = mode == "test"
     hist2d_mode = mode == "count2d"
@@ -102,9 +94,11 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
         get_statistic(statistic).pvalue_device if statistic is not None else None
     )
 
-    def expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_mw,
-               db_wm, pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
+    def expand(occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_tiles,
+               pos_mask, out_occ, out_meta, out_ptr, delta, n_act,
                npos_act):
+        assert db_tiles.shape[0] * db_tiles.shape[1] == m, (db_tiles.shape, m)
+        db_flat = db_tiles.reshape(m, db_tiles.shape[2])  # [m, W] view
         take = jnp.minimum(sp, B)
         rows = jnp.arange(B)
         node_idx = top_indices(head, sp, rows, CAP)
@@ -118,7 +112,9 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
         sp_after = sp - take
 
         alive = row_valid & (sup >= lam)
-        supports = supports_gemm(occ_nodes, db_mw, db_wm, kernel_impl)  # [B, M]
+        supports = supports_gemm(
+            occ_nodes, db_tiles, kernel_impl, kernel_blocks
+        )  # [B, M]
         item_ids = jnp.arange(m)[None, :]
         in_clo = supports == sup[:, None]
         prefix_ct = jnp.sum(in_clo & (item_ids < core[:, None]), axis=1)
@@ -180,7 +176,7 @@ def build_expand(*, n: int, n_pos: int, m: int, cfg, mode: str,
         cand_idx = jnp.minimum(cand_idx, flat.shape[0] - 1)
         child_b = jnp.clip(cand_idx // m, 0, B - 1)
         child_j = jnp.clip(cand_idx % m, 0, m - 1)
-        child_occ = occ_nodes[child_b] & db_mw[child_j]
+        child_occ = occ_nodes[child_b] & db_flat[child_j]
         child_meta = jnp.stack(
             [
                 child_j,

@@ -1,4 +1,34 @@
-"""jit'd public wrapper for the support-count kernel (padding + layout)."""
+"""THE dispatch point for support counting (DESIGN.md §8).
+
+Every support-count in the system — the engine's expand phase, host-side
+closure reconstruction, benchmarks, tests — goes through this module, so a
+kernel variant or block-size change lands everywhere at once.  Variants:
+
+  ref               pure-jnp popcount contraction (oracle; CPU default)
+  pallas            Pallas TPU kernel (VMEM-tiled popcount-GEMM)
+  pallas_interpret  the same kernel through the Pallas interpreter — the
+                    carrier for CPU CI mines (kernel semantics, no TPU)
+  pallas_gpu        the same kernel through the Triton lowering, with
+                    GPU-sized blocks from the autotuner
+
+Block sizes come from `autotune.choose_blocks` (measured seed table, then
+an analytic roofline) instead of the old hard-coded `(8, 512, 32)`.
+
+The database argument is item-major `[M, W]` — `pack_db`'s native layout
+and the flat view of `core.bitmap.BitmapLayout` — not the word-major
+transpose the pre-§8 wrapper wanted; the kernel-facing transpose happens
+per tile at trace time.  Two entries:
+
+  `support_counts`       public eager wrapper: bucket-pads (b, m, w) to
+                         power-of-two grids so ragged call shapes share one
+                         compiled program (the old wrapper re-jitted per
+                         distinct shape and re-specialized `block_b` per odd
+                         batch size), tiles the item axis, slices back.
+  `support_counts_tiled` traced hot path over a pre-tiled `[T, m_tile, W]`
+                         database — what the engine's expand phase calls
+                         inside its superstep; sweeps tile by tile so the
+                         working set stays [B, m_tile]-sized at 250k items.
+"""
 
 from __future__ import annotations
 
@@ -6,9 +36,41 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core.bitmap import item_tiling
+
+from . import autotune
 from .kernel import support_count_pallas
-from .ref import support_count_ref
+
+__all__ = [
+    "VALID_IMPLS",
+    "resolve_impl",
+    "support_counts",
+    "support_counts_tiled",
+    "tile_counts",
+]
+
+#: concrete kernel variants ("auto" resolves per backend via `resolve_impl`)
+VALID_IMPLS = ("ref", "pallas", "pallas_interpret", "pallas_gpu")
+
+
+def resolve_impl(impl: str, backend: str | None = None) -> str:
+    """Resolve the "auto" kernel selection against the active backend.
+
+    "auto" means: the Pallas popcount-GEMM on TPU, its Triton lowering on
+    GPU, the jnp reference contraction everywhere else.  Concrete names
+    pass through untouched, so explicit choices (incl. "pallas_interpret"
+    for CPU testing/CI mines) still win.
+    """
+    if impl == "auto":
+        backend = jax.default_backend() if backend is None else backend
+        return {"tpu": "pallas", "gpu": "pallas_gpu"}.get(backend, "ref")
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; valid: auto, {', '.join(VALID_IMPLS)}"
+        )
+    return impl
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -21,35 +83,102 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     return jnp.pad(x, pads)  # zero words: AND contributes nothing
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_b", "block_m", "block_w", "impl", "interpret")
-)
-def support_counts(
+def tile_counts(
     occ: jax.Array,
-    db_t: jax.Array,
+    tile_mw: jax.Array,
     *,
-    block_b: int = 8,
-    block_m: int = 512,
-    block_w: int = 32,
-    impl: str = "pallas",
-    interpret: bool = False,
+    impl: str,
+    blocks: tuple[int, int, int] | None = None,
 ) -> jax.Array:
-    """Support of every item-extension of every node: [B, W] x [W, M] -> [B, M].
+    """One tile: occ [B, W] x tile [m_tile, W] -> [B, m_tile] int32 (traced).
 
-    Zero-pads every axis to its block multiple (bit-safe: padded words are 0,
-    so they contribute no counts) and slices the result back.
-    impl: "pallas" (TPU target; interpret=True on CPU) or "ref" (pure jnp).
+    The word-major transpose the kernel wants is taken here at trace time
+    (cheap next to the [B, m_tile, W] contraction; for a loop-invariant
+    database XLA hoists it).  Padding to block multiples is bit-safe: padded
+    words/items are zero, so they contribute no counts.
     """
     b, w = occ.shape
-    _, m = db_t.shape
+    mt, w2 = tile_mw.shape
+    assert w == w2, (occ.shape, tile_mw.shape)
     if impl == "ref":
-        return support_count_ref(occ, db_t)
-    block_b = min(block_b, max(8, b))
-    occ_p = _pad_to(_pad_to(occ, 0, block_b), 1, block_w)
-    db_p = _pad_to(_pad_to(db_t, 0, block_w), 1, block_m)
+        inter = occ[:, None, :] & tile_mw[None, :, :]
+        return jnp.sum(lax.population_count(inter), axis=-1).astype(jnp.int32)
+    if blocks is None:
+        blocks = autotune.choose_blocks(b, mt, w, impl)
+    bb, bm, bw = blocks
+    occ_p = _pad_to(_pad_to(occ, 0, bb), 1, bw)
+    db_wm = _pad_to(_pad_to(tile_mw, 0, bm), 1, bw).T
     out = support_count_pallas(
-        occ_p, db_p,
-        block_b=block_b, block_m=block_m, block_w=block_w,
-        interpret=interpret,
+        occ_p, db_wm, block_b=bb, block_m=bm, block_w=bw,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out[:b, :mt]
+
+
+def support_counts_tiled(
+    occ: jax.Array,
+    db_tiles: jax.Array,
+    *,
+    impl: str,
+    blocks: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """occ [B, W] x db_tiles [T, m_tile, W] -> [B, T*m_tile] int32 (traced).
+
+    The engine's expand-phase entry: sweeps the item tiles sequentially
+    (`lax.map` keeps the program rolled — one kernel instance, not T), so
+    per-superstep intermediates scale with m_tile, never with total items.
+    Bit-identical to the untiled contraction: popcount sums are exact
+    integers and tile order only permutes independent output columns.
+    """
+    t = db_tiles.shape[0]
+    if t == 1:
+        return tile_counts(occ, db_tiles[0], impl=impl, blocks=blocks)
+    out = lax.map(
+        lambda tile: tile_counts(occ, tile, impl=impl, blocks=blocks),
+        db_tiles,
+    )  # [T, B, m_tile]
+    return jnp.moveaxis(out, 0, 1).reshape(occ.shape[0], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "blocks"))
+def _support_counts_padded(occ, db_tiles, *, impl, blocks):
+    return support_counts_tiled(occ, db_tiles, impl=impl, blocks=blocks)
+
+
+def support_counts(
+    occ,
+    db_bits,
+    *,
+    impl: str = "auto",
+    blocks: tuple[int, int, int] | None = None,
+    m_tile: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Support of every item against every bitmap: [B, W] x [M, W] -> [B, M].
+
+    The public eager wrapper (host reconstruction, benchmarks, tests).
+    Bucket-pads every axis to its power-of-two grid *before* the jit
+    boundary, so all ragged shapes in a bucket share one compiled program,
+    then slices the exact [B, M] result back out.  `interpret=True` is
+    shorthand for impl="pallas_interpret" (back-compat with the pre-§8
+    signature); the database is item-major [M, W].
+    """
+    if interpret:
+        impl = "pallas_interpret"
+    impl = resolve_impl(impl)
+    occ = jnp.asarray(occ, dtype=jnp.uint32)
+    db = jnp.asarray(db_bits, dtype=jnp.uint32)
+    b, w = occ.shape
+    m, w2 = db.shape
+    assert w == w2, (occ.shape, db.shape)
+    bp, mp, wp = autotune.bucket_dims(b, m, w)
+    if blocks is None and impl != "ref":
+        blocks = autotune.choose_blocks(b, m, w, impl)
+    mt = m_tile if m_tile is not None else item_tiling(mp)[1]
+    mp = -(-mp // mt) * mt
+    occ_p = _pad_to(_pad_to(occ, 0, bp), 1, wp)
+    db_p = _pad_to(_pad_to(db, 0, mp), 1, wp)
+    out = _support_counts_padded(
+        occ_p, db_p.reshape(mp // mt, mt, wp), impl=impl, blocks=blocks
     )
     return out[:b, :m]

@@ -56,9 +56,10 @@ def main(argv=None):
     ap.add_argument("--stack-cap", type=int, default=0,
                     help="per-miner stack capacity (0 = auto-size)")
     ap.add_argument("--kernel", default="auto",
-                    choices=["auto", "ref", "pallas", "pallas_interpret"],
+                    choices=["auto", "ref", "pallas", "pallas_interpret",
+                             "pallas_gpu"],
                     help="support-count kernel (auto: pallas on TPU, "
-                         "ref elsewhere)")
+                         "pallas_gpu on GPU, ref elsewhere)")
     ap.add_argument("--sync-period", type=int, default=4,
                     help="supersteps between lambda/histogram syncs "
                          "(staleness costs work, never results)")

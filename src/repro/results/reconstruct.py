@@ -17,8 +17,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.bitmap import supports_np
-
 __all__ = ["reconstruct_closures", "dedup_by_closure"]
 
 
@@ -27,16 +25,21 @@ def reconstruct_closures(
 ) -> list[tuple[int, ...]]:
     """[K, W] occurrence bitmaps + [K] supports -> K closure itemsets.
 
-    Chunked over records so the [chunk, M] popcount-GEMM intermediate stays
-    small even for GWAS-scale M.
+    Routed through the support-count dispatch point (DESIGN.md §8), which
+    tiles the item axis internally — at GWAS scale (250k items) the old
+    in-place numpy contraction materialized a [chunk, M, W] intermediate of
+    several GB per chunk; the tiled op's working set is [chunk, m_tile].
+    Chunked over records so the [chunk, M] *output* stays small too.
     """
+    from repro.kernels.support_count.ops import support_counts
+
     occ = np.asarray(occ, dtype=np.uint32)
     sup = np.asarray(sup)
     k = occ.shape[0]
     out: list[tuple[int, ...]] = []
     for lo in range(0, k, chunk):
         hi = min(lo + chunk, k)
-        s = supports_np(occ[lo:hi], db_bits)  # [chunk, M]
+        s = np.asarray(support_counts(occ[lo:hi], db_bits))  # [chunk, M]
         in_clo = s == sup[lo:hi, None]
         for r in range(hi - lo):
             out.append(tuple(np.flatnonzero(in_clo[r]).tolist()))

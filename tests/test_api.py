@@ -144,14 +144,15 @@ def test_runtime_resolve_is_bucket_deterministic():
 
 
 def test_kernel_impl_auto_resolves_per_backend(monkeypatch):
-    """"auto" picks the Pallas kernel on TPU and the jnp ref elsewhere."""
+    """"auto" picks the Pallas kernel on TPU, its Triton lowering on GPU,
+    and the jnp ref elsewhere."""
     import jax
 
     from repro.core.expand import resolve_kernel_impl
 
     assert resolve_kernel_impl("auto", backend="tpu") == "pallas"
     assert resolve_kernel_impl("auto", backend="cpu") == "ref"
-    assert resolve_kernel_impl("auto", backend="gpu") == "ref"
+    assert resolve_kernel_impl("auto", backend="gpu") == "pallas_gpu"
     # explicit choices always pass through untouched
     assert resolve_kernel_impl("pallas_interpret", backend="tpu") == "pallas_interpret"
     assert resolve_kernel_impl("ref", backend="tpu") == "ref"

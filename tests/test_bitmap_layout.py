@@ -1,0 +1,225 @@
+"""BitmapLayout + tiled engine equivalence (DESIGN.md §8).
+
+The item-tiled database layout is a pure re-arrangement of exact integer
+math: a full mine under any tiling (and any kernel variant) must reproduce
+the untiled ref-kernel ResultSet bit-for-bit.  These tests pin that, plus
+the layout invariants the engine relies on (zero-padded tail, free flat
+view, bucket tile propagation into reports and cache keys).
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import AlgorithmConfig, Dataset, MinerSession, RuntimeConfig
+from repro.api.dataset import BucketPolicy, ShapeBucket
+from repro.core.bitmap import BitmapLayout, pack_db
+from repro.core.engine import mine, pack_problem
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def small_problem(seed=0, n=60, m=40):
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, m)) < 0.3
+    labels = rng.random(n) < 0.4
+    # plant one enriched pair so phase 3 has signal
+    carrier = np.where(labels, rng.random(n) < 0.7, rng.random(n) < 0.05)
+    db[carrier, 3] = True
+    db[carrier, 17] = True
+    return db, labels
+
+
+# ----------------------------------------------------------------- layout
+def test_layout_roundtrip_and_tail():
+    rng = np.random.default_rng(0)
+    db = rng.integers(0, 2**32, size=(100, 3), dtype=np.uint32)
+    layout = BitmapLayout.from_db_bits(db, m_tile=32)
+    assert layout.n_tiles == 4 and layout.m_tile == 32 and layout.m_pad == 128
+    np.testing.assert_array_equal(layout.flat[:100], db)
+    assert (layout.flat[100:] == 0).all()          # padded tail is zero
+    np.testing.assert_array_equal(
+        layout.tail_mask(), np.arange(128) < 100
+    )
+    assert not layout.tiles.flags.writeable
+
+
+def test_layout_single_tile_default():
+    db = np.ones((10, 2), dtype=np.uint32)
+    layout = BitmapLayout.from_db_bits(db)
+    assert layout.n_tiles == 1 and layout.m_tile == 10 and layout.m_pad == 10
+
+
+def test_layout_validation():
+    db = np.ones((10, 2), dtype=np.uint32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        BitmapLayout.from_db_bits(db, m_tile=4, m_pad=10)
+    with pytest.raises(ValueError, match="smaller than"):
+        BitmapLayout.from_db_bits(db, m_tile=4, m_pad=8)
+
+
+def test_packed_problem_tiled_views():
+    db, labels = small_problem()
+    packed = pack_problem(db, labels, m_tile=16)
+    assert packed.db_tiles.shape == (3, 16, packed.w_pad)  # 40 -> 48 pad
+    assert packed.m_pad == 48 and packed.m == 40
+    np.testing.assert_array_equal(
+        packed.db_bits[:40], pack_db(db)
+    )
+
+
+# ------------------------------------------------- engine-level bit parity
+def test_tiled_mine_reproduces_untiled_bitexact():
+    """Full mine under forced multi-tile layout == untiled seed behavior:
+    histogram, lambda, supersteps' results, and the ResultSet all equal."""
+    db, labels = small_problem(seed=4)
+    ref = mine(db, labels, mode="lamp1", alpha=0.05)
+    tiled = mine(db, labels, mode="lamp1", alpha=0.05,
+                 packed=pack_problem(db, labels, m_tile=8))  # 5 tiles
+    assert tiled.lam_final == ref.lam_final
+    np.testing.assert_array_equal(tiled.hist, ref.hist)
+
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas_interpret"])
+def test_tiled_session_resultset_bitexact(kernel):
+    """Session-level: tiled layout (+ either kernel) reproduces the untiled
+    ref-kernel ResultSet bit-for-bit — patterns, supports, p/q-values.
+
+    This is also the tier-1 expand-path kernel smoke: kernel="pallas_interpret"
+    runs the actual Pallas kernel body (interpreted) inside a real mine's
+    superstep loop, not just the unit contraction.
+    """
+    db, labels = small_problem(seed=7)
+    ds_ref = Dataset.from_dense(db, labels, name="untiled")
+    # item_tile=16 forces a 4-tile layout for the 64-item bucket
+    ds_tiled = Dataset.from_dense(
+        db, labels, name="tiled",
+        bucket_policy=BucketPolicy(item_tile=16),
+    )
+    assert ds_tiled.bucket.item_tile == 16
+    assert ds_tiled.packed.db_tiles.shape[0] == 4
+
+    def run(ds, kernel_impl):
+        session = MinerSession(
+            algorithm=AlgorithmConfig(alpha=0.05),
+            runtime=RuntimeConfig(expand_batch=8, stack_cap=2048,
+                                  steal_max=32, push_cap=128,
+                                  kernel_impl=kernel_impl),
+        )
+        return session.mine(ds)
+
+    def patterns(rep):
+        return sorted(
+            (tuple(p.items), p.support, p.pos_support, p.pvalue, p.qvalue)
+            for p in rep.results
+        )
+
+    ref = run(ds_ref, "ref")
+    rep = run(ds_tiled, kernel)
+    assert rep.lambda_final == ref.lambda_final
+    assert rep.min_sup == ref.min_sup
+    assert rep.correction_factor == ref.correction_factor
+    assert rep.delta == ref.delta
+    assert rep.n_significant == ref.n_significant
+    assert patterns(rep) == patterns(ref)
+    # provenance recorded (S1): the resolved impl, never "auto"
+    assert rep.kernel_impl == kernel
+    assert rep.item_tile == 16
+    if kernel == "ref":
+        assert rep.kernel_blocks is None
+    else:
+        assert len(rep.kernel_blocks) == 3
+
+
+# --------------------------------------------------- bucket / cache keying
+def test_bucket_item_tile_field():
+    pol = BucketPolicy(item_tile=32)
+    b = pol.bucket_for(60, 20, 100)  # items round to 128, 4 tiles of 32
+    assert b == ShapeBucket(64, 32, 128, item_tile=32)
+    assert b.tile == 32 and b.n_tiles == 4
+    # small item dims stay single-tile with item_tile=0 (legacy equality)
+    b2 = BucketPolicy().bucket_for(60, 20, 24)
+    assert b2 == ShapeBucket(64, 32, 64)
+    assert b2.item_tile == 0 and b2.tile == 64 and b2.n_tiles == 1
+
+
+def test_exact_policy_still_tiles_huge_items():
+    pol = BucketPolicy(exact=True, item_tile=64)
+    b = pol.bucket_for(100, 30, 150)
+    assert b.items == 192 and b.item_tile == 64 and b.n_tiles == 3
+
+
+def test_kernel_blocks_in_resolved_config():
+    bucket = ShapeBucket(64, 16, 4096, item_tile=0)
+    cfg_ref = RuntimeConfig(kernel_impl="ref").resolve(bucket, 1)
+    assert cfg_ref.kernel_blocks is None
+    cfg_k = RuntimeConfig(kernel_impl="pallas_interpret").resolve(bucket, 1)
+    assert cfg_k.kernel_blocks is not None and len(cfg_k.kernel_blocks) == 3
+    # explicit blocks pass through and distinguish the resolved config
+    cfg_exp = RuntimeConfig(
+        kernel_impl="pallas_interpret", kernel_blocks=(8, 128, 8)
+    ).resolve(bucket, 1)
+    assert cfg_exp.kernel_blocks == (8, 128, 8)
+    assert cfg_exp != cfg_k or cfg_k.kernel_blocks == (8, 128, 8)
+
+
+def test_tiled_and_untiled_buckets_never_share_programs():
+    """item_tile is part of the bucket, hence of the session cache key."""
+    db, labels = small_problem()
+    ds_a = Dataset.from_dense(db, labels, name="a")
+    ds_b = Dataset.from_dense(
+        db, labels, name="b", bucket_policy=BucketPolicy(item_tile=16)
+    )
+    assert ds_a.bucket != ds_b.bucket
+    session = MinerSession(
+        runtime=RuntimeConfig(expand_batch=8, stack_cap=2048, steal_max=32,
+                              push_cap=128)
+    )
+    session.run_phase(ds_a, "count", min_sup=5)
+    session.run_phase(ds_b, "count", min_sup=5)
+    info = session.cache_info()
+    assert info.misses == 2 and info.hits == 0  # distinct programs
+
+
+def test_packed_words_dataset_matches_dense():
+    """Dataset.from_packed_words == Dataset.from_dense for the same bits."""
+    db, labels = small_problem(seed=2)
+    bits = pack_db(db)
+    ds_dense = Dataset.from_dense(db, labels, name="dense")
+    ds_packed = Dataset.from_packed_words(
+        bits, labels, n_transactions=db.shape[0], name="packed"
+    )
+    assert ds_packed.bucket == ds_dense.bucket
+    np.testing.assert_array_equal(
+        ds_packed.packed.db_tiles, ds_dense.packed.db_tiles
+    )
+    np.testing.assert_array_equal(
+        ds_packed.packed.pos_mask, ds_dense.packed.pos_mask
+    )
+    assert ds_packed.n_pos == ds_dense.n_pos
+
+    session = MinerSession(
+        runtime=RuntimeConfig(expand_batch=8, stack_cap=2048, steal_max=32,
+                              push_cap=128)
+    )
+    rep_d = session.mine(ds_dense)
+    rep_p = session.mine(ds_packed)
+    assert rep_p.n_significant == rep_d.n_significant
+    assert rep_p.lambda_final == rep_d.lambda_final
+    assert not rep_p.cold  # same bucket: fully warm replay
+
+
+def test_generate_packed_matches_spec():
+    """generate_packed: right shapes, plausible density, planted support."""
+    from repro.core.bitmap import popcount_np
+    from repro.data.synthetic import SyntheticSpec, generate_packed
+
+    spec = SyntheticSpec("t", n_items=500, n_transactions=200, density=0.05,
+                         n_pos=60, seed=1)
+    bits, labels, planted = generate_packed(spec, item_chunk=128)
+    assert bits.shape == (500, 7)  # ceil(200/32)
+    assert labels.sum() == 60
+    density = popcount_np(bits).sum() / (500 * 200)
+    assert 0.02 < density < 0.15
+    for itemset in planted:
+        for j in itemset:
+            assert popcount_np(bits[j]).sum() >= spec.planted_pos_rate * 30
