@@ -20,10 +20,15 @@ modeled speedup vs miner count P (benchmarks/common.py documents the
 makespan model — this container is single-core, so multi-miner wall-clock
 is meaningless and the per-superstep trace gives the exact parallel
 schedule instead).  The
-`superstep_breakdown` section attributes the per-superstep constant to the
-three phases (expand / steal / global-sync µs, by differencing warm runs
-with the steal exchange and the lambda sync toggled) and tabulates bytes
-moved per round before vs after the deque/gating redesign (DESIGN.md §6).
+`superstep_breakdown` section is built from the engine's on-device
+superstep trace (repro.obs, DESIGN.md §9): exact steal-round/fired counts,
+Jain's fairness over per-miner donation and work volumes, per-miner
+idle-fraction series, and the measured per-step overhead of tracing itself
+(a traced vs untraced warm run — the only run pair left; the old
+phase-attribution-by-run-differencing is gone, the trace reads the same
+quantities off the device directly).  It also tabulates bytes moved per
+round before vs after the deque/gating redesign (DESIGN.md §6), now with
+the fired fraction taken from the trace rather than inferred.
 The `repeated_query` section drives one `repro.api.MinerSession` with
 reseeded same-bucket queries: the first is cold (compiles one program per
 phase), the rest replay warm compiled programs — `cold_over_warm` is the
@@ -113,57 +118,69 @@ def _timed_warm(session, ds, mode, min_sup, repeats: int = 3):
 
 
 def superstep_breakdown(ds, ms, devices, runtime, base) -> dict:
-    """Attribute the per-superstep constant to expand / steal / global-sync.
+    """Per-superstep telemetry, read off the device trace (DESIGN.md §9).
 
-    One compiled superstep can't be phase-timed from the host, so the
-    breakdown differences warm runs with one phase's cost toggled: the steal
-    share comes from steal_enabled on/off (per-step normalized — the two
-    runs take different superstep counts), the lambda-sync share from
-    sync_period 1 vs 16 in mode "lamp1", and expand is the remainder.  The
-    bytes-per-round table is analytic from the config: the old design moved
-    the full [stack_cap, W+4] stack twice per round (shift-on-steal), sent
-    4 ppermutes, and psum'd the [n+2] histogram every round; the deque
-    moves one packed [steal_max, W+5] payload on fired rounds only and
-    syncs the histogram delta every sync_period rounds (plus the [P]-int
-    hunger census).
+    `base` is bench_problem's warm traced count run at this P (trace_period=1,
+    so every superstep is sampled).  The decoded `SuperstepTrace` supplies
+    exactly what the deleted run-differencing estimated: how many exchange
+    rounds fired, how evenly the donation traffic spread (Jain's index — the
+    paper's "evenly distributed communication" as one number), per-miner
+    idle fractions, and depth imbalance.  The one run pair left measures the
+    *trace's own* cost: an untraced warm run gives per-step µs without the
+    ring write, and `trace_overhead_pct` is the regression tracing costs
+    (acceptance: < 5% at trace_period=1) — results are asserted
+    bit-identical between the two.
+
+    The bytes-per-round table is analytic from the config: the old design
+    moved the full [stack_cap, W+4] stack twice per round (shift-on-steal),
+    sent 4 ppermutes, and psum'd the [n+2] histogram every round; the deque
+    moves one packed [steal_max, W+5] payload on fired rounds only (fraction
+    now exact, from the trace) and syncs the histogram delta every
+    sync_period rounds (plus the [P]-int hunger census).
     """
+    import numpy as np
+
     p = len(devices)
     cfg = runtime.resolve(ds.bucket, p)
     w = ds.bucket.words
     node_words = w + 4  # occ [W]u32 + meta [4]i32
 
-    wall_c, r_c = base  # bench_problem's warm count run at this same P
-    s_c = max(r_c.supersteps, 1)
-    wall_ns, r_ns = _timed_warm(
-        _session(devices, runtime.with_options(steal_enabled=False)),
+    wall_t, r_t = base  # bench_problem's warm *traced* count run at this P
+    s_t = max(r_t.supersteps, 1)
+    tr = r_t.trace
+    # the cost of tracing itself: same program minus the ring write
+    wall_u, r_u = _timed_warm(
+        _session(devices, runtime.with_options(trace_period=0, trace_cap=0)),
         ds, "count", ms)
-    steal_us = wall_c / s_c * 1e6 - wall_ns / max(r_ns.supersteps, 1) * 1e6
-    wall_l1, r_l1 = _timed_warm(
-        _session(devices, runtime.with_options(sync_period=1)), ds, "lamp1", 1)
-    wall_l16, r_l16 = _timed_warm(
-        _session(devices, runtime.with_options(sync_period=16)), ds, "lamp1", 1)
-    # differencing warm runs bottoms out at this container's noise floor;
-    # clamp the derived shares at 0 rather than report a negative phase
-    sync_us = max(0.0, (wall_l1 / max(r_l1.supersteps, 1)
-                        - wall_l16 / max(r_l16.supersteps, 1))
-                  * 1e6 / (1 - 1 / 16))
-    steal_us = max(0.0, steal_us)
-    total_us = wall_c / s_c * 1e6
-    fired = int(r_c.stats["steal_rounds"][0])
-    fired_frac = fired / s_c
+    np.testing.assert_array_equal(r_t.hist, r_u.hist)  # tracing never perturbs
+    traced_us = wall_t / s_t * 1e6
+    untraced_us = wall_u / max(r_u.supersteps, 1) * 1e6
+    overhead_pct = (traced_us - untraced_us) / untraced_us * 100
+
+    fired = int(tr.fired.sum())
+    fired_frac = fired / s_t
     payload = (cfg.steal_max * (node_words + 1)) * 4  # packed occ|meta|k rows
     nb = ds.n_transactions + 2
     return {
         "P": p,
-        "supersteps": s_c,
+        "supersteps": s_t,
+        "sampled_steps": tr.n_steps,
+        "trace_dropped": tr.dropped,
         "steal_rounds_fired": fired,
         "fired_fraction": round(fired_frac, 4),
         "per_step_us": {
-            "total": round(total_us, 1),
-            "steal": round(steal_us, 1),
-            "global_sync": round(sync_us, 1),
-            "expand": round(total_us - steal_us, 1),  # count mode has no hist sync
+            "traced": round(traced_us, 1),
+            "untraced": round(untraced_us, 1),
         },
+        "trace_overhead_pct": round(overhead_pct, 2),
+        # load balance, per miner, off the device timeline:
+        "steal_fairness": {
+            "donation": round(tr.donation_fairness(), 4),  # Jain, [1/P, 1]
+            "work": round(tr.work_fairness(), 4),
+            "depth_imbalance": round(tr.depth_imbalance(), 3),
+        },
+        "idle_fraction": [round(float(x), 4) for x in tr.idle_fraction()],
+        "donated_nodes": [int(x) for x in tr.donated.sum(axis=1)],
         # per miner per round; "before" = the pre-deque shift-on-steal design
         "bytes_per_round": {
             "stack_shift_before": 2 * cfg.stack_cap * node_words * 4,
@@ -191,13 +208,13 @@ def bench_problem(name: str, scales: dict, p_values) -> dict:
     ms = ref.min_sup
     devices = jax.devices()
     runtime = RuntimeConfig(expand_batch=16, stack_cap=8192,
-                            trace_cap=TRACE_CAP)
+                            trace_period=1, trace_cap=TRACE_CAP)
 
     # warm single-device run calibrates c_node (zero-compile dispatch)
     wall1, r1 = _timed_warm(_session(devices[:1], runtime), ds, "count", ms)
     nodes = int(r1.stats["popped"].sum())
     c_node = wall1 / max(nodes, 1)
-    t1 = makespan(r1.trace, r1.supersteps, c_node)
+    t1 = makespan(r1.trace.popped, r1.supersteps, c_node)
 
     speedup, wall_s = {"1": 1.0}, {"1": round(wall1, 3)}
     base = (wall1, r1)  # the warm count run at p_max, reused by the breakdown
@@ -207,7 +224,7 @@ def bench_problem(name: str, scales: dict, p_values) -> dict:
             continue
         wall_p, rp = _timed_warm(_session(devices[:p], runtime), ds, "count", ms)
         wall_s[str(p)] = round(wall_p, 3)
-        tp = makespan(rp.trace, rp.supersteps, c_node)
+        tp = makespan(rp.trace.popped, rp.supersteps, c_node)
         speedup[str(p)] = round(t1 / tp, 3)
         if p > p_max:
             base, p_max = (wall_p, rp), p
@@ -458,16 +475,29 @@ def compare_markdown(old: dict, new: dict) -> str:
         lines.append(f"| stat={stat} warm_mean | - | {s_old} | {s_new} | {ratio} |")
     bd = next(iter(new.get("problems", [])), {}).get("superstep_breakdown")
     if bd:
-        lines += [
-            "",
-            f"per-superstep (P={bd['P']}): total {bd['per_step_us']['total']}µs"
-            f" = expand {bd['per_step_us']['expand']}µs"
-            f" + steal {bd['per_step_us']['steal']}µs"
-            f" (sync {bd['per_step_us']['global_sync']}µs/step in lamp1);"
-            f" steal rounds fired {bd['steal_rounds_fired']}/{bd['supersteps']},"
-            f" bytes/round {bd['bytes_per_round']['stack_shift_before']}"
-            f" -> {bd['bytes_per_round']['steal_payload_after']}",
-        ]
+        # schema-defensive: old baselines carry the differencing-era keys
+        # (per_step_us.total/expand/steal), new ones the trace-based keys
+        psu = bd.get("per_step_us", {})
+        if "traced" in psu:
+            head = (f"per-superstep (P={bd['P']}): {psu['traced']}µs traced / "
+                    f"{psu['untraced']}µs untraced "
+                    f"(trace overhead {bd.get('trace_overhead_pct', 'n/a')}%)")
+        else:
+            head = (f"per-superstep (P={bd['P']}): total "
+                    f"{psu.get('total', 'n/a')}µs")
+        line = (f"{head};"
+                f" steal rounds fired {bd.get('steal_rounds_fired', 'n/a')}"
+                f"/{bd.get('supersteps', 'n/a')},"
+                f" bytes/round "
+                f"{bd.get('bytes_per_round', {}).get('stack_shift_before', 'n/a')}"
+                f" -> "
+                f"{bd.get('bytes_per_round', {}).get('steal_payload_after', 'n/a')}")
+        sf = bd.get("steal_fairness")
+        if sf:
+            line += (f"; donation fairness {sf['donation']},"
+                     f" work fairness {sf['work']},"
+                     f" depth imbalance {sf['depth_imbalance']}")
+        lines += ["", line]
     return "\n".join(lines) + "\n"
 
 

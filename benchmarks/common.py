@@ -1,10 +1,11 @@
 """Shared helpers for the paper-reproduction benchmarks.
 
 BSP makespan model (this container has one physical core, so multi-miner
-wall-clock is meaningless; the engine's per-superstep trace gives the exact
-parallel schedule instead):
+wall-clock is meaningless; the engine's superstep trace — `MineOutput.trace`,
+a decoded `repro.obs.SuperstepTrace` at trace_period=1 — gives the exact
+parallel schedule instead; pass its `.popped` [P, S] series):
 
-    T_P = sum_t [ max_p trace[p, t] * c_node ]  +  supersteps * c_round
+    T_P = sum_t [ max_p popped[p, t] * c_node ]  +  supersteps * c_round
 
 c_node is measured from a single-device run (wall seconds per expanded node);
 c_round models the per-superstep collective/steal latency (default 20 us — a
@@ -40,10 +41,11 @@ def save_json(name: str, payload):
     return path
 
 
-def makespan(trace: np.ndarray, supersteps: int, c_node: float,
+def makespan(popped: np.ndarray, supersteps: int, c_node: float,
              c_round: float = C_ROUND_S) -> float:
-    """trace [P, T_cap] popped-per-superstep -> modeled parallel seconds."""
-    t = trace[:, :supersteps] if supersteps <= trace.shape[1] else trace
+    """popped [P, S] per-superstep series (`SuperstepTrace.popped` at
+    trace_period=1) -> modeled parallel seconds."""
+    t = popped[:, :supersteps] if supersteps <= popped.shape[1] else popped
     return float(np.sum(t.max(axis=0)) * c_node + supersteps * c_round)
 
 

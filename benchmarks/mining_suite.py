@@ -65,7 +65,7 @@ def fig6_speedup(p_values=(1, 2, 4, 8, 16)):
         ref = lamp(db, labels, alpha=0.05)
         ms = ref.min_sup
         # c_node from the single-device engine run
-        cfg1 = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+        cfg1 = EngineConfig(expand_batch=16, trace_period=1, trace_cap=TRACE_CAP)
         r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg1,
                   devices=devices[:1])
         t0 = time.time()
@@ -74,15 +74,15 @@ def fig6_speedup(p_values=(1, 2, 4, 8, 16)):
         wall1 = time.time() - t0
         nodes1 = int(r1.stats["popped"].sum())
         c_node = wall1 / max(nodes1, 1)
-        t_1 = makespan(r1.trace, r1.supersteps, c_node)
+        t_1 = makespan(r1.trace.popped, r1.supersteps, c_node)
         rows = []
         for p in p_values:
             if p > len(devices):
                 continue
             res = mine(db, labels, mode="count", min_sup=ms,
-                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP),
+                       cfg=EngineConfig(expand_batch=16, trace_period=1, trace_cap=TRACE_CAP),
                        devices=devices[:p])
-            t_p = makespan(res.trace, res.supersteps, c_node)
+            t_p = makespan(res.trace.popped, res.supersteps, c_node)
             work = res.stats["popped"].astype(float)
             rows.append({
                 "P": p,
@@ -108,7 +108,7 @@ def table2_naive(p: int = 8):
         db, labels, _, spec = _load(name)
         ref = lamp(db, labels, alpha=0.05)
         ms = ref.min_sup
-        cfg1 = EngineConfig(expand_batch=16, trace_cap=TRACE_CAP)
+        cfg1 = EngineConfig(expand_batch=16, trace_period=1, trace_cap=TRACE_CAP)
         r1 = mine(db, labels, mode="count", min_sup=ms, cfg=cfg1,
                   devices=devices[:1])
         t0 = time.time()
@@ -116,14 +116,14 @@ def table2_naive(p: int = 8):
              cfg=EngineConfig(expand_batch=16), devices=devices[:1])
         wall1 = time.time() - t0
         c_node = wall1 / max(int(r1.stats["popped"].sum()), 1)
-        t_1 = makespan(r1.trace, r1.supersteps, c_node)
+        t_1 = makespan(r1.trace.popped, r1.supersteps, c_node)
         row = {"name": name, "t1_s": t_1}
         for steal, label in [(True, "glb"), (False, "naive")]:
             res = mine(db, labels, mode="count", min_sup=ms,
-                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP,
+                       cfg=EngineConfig(expand_batch=16, trace_period=1, trace_cap=TRACE_CAP,
                                         steal_enabled=steal),
                        devices=devices[:p])
-            t_p = makespan(res.trace, res.supersteps, c_node)
+            t_p = makespan(res.trace.popped, res.supersteps, c_node)
             work = res.stats["popped"].astype(float)
             row[f"{label}_T_s"] = t_p
             row[f"{label}_speedup"] = t_1 / t_p
@@ -147,7 +147,7 @@ def fig7_breakdown(p_values=(1, 4, 16)):
             if p > len(devices):
                 continue
             res = mine(db, labels, mode="count", min_sup=ref.min_sup,
-                       cfg=EngineConfig(expand_batch=16, trace_cap=TRACE_CAP),
+                       cfg=EngineConfig(expand_batch=16, trace_period=1, trace_cap=TRACE_CAP),
                        devices=devices[:p])
             rows.append({
                 "P": p,

@@ -38,7 +38,7 @@ def run_pipeline(db, labels, cfg, pipeline):
 
 
 def modeled_T(phases, c_node):
-    return sum(makespan(p.trace, p.supersteps, c_node) for p in phases)
+    return sum(makespan(p.trace.popped, p.supersteps, c_node) for p in phases)
 
 
 def run():
@@ -70,7 +70,7 @@ def run():
               f"T16={row['modeled_T16_s']}s")
         return row
 
-    base_cfg = EngineConfig(expand_batch=16, steal_max=128, trace_cap=TRACE)
+    base_cfg = EngineConfig(expand_batch=16, steal_max=128, trace_period=1, trace_cap=TRACE)
     base = record(
         "baseline", "paper-faithful 3-phase pipeline, B=16, T=128", base_cfg,
         "three_phase",
@@ -88,7 +88,7 @@ def run():
             f"B={b}: halve/quarter superstep count (collective latency "
             "amortization); risk: coarser steal granularity worsens tail "
             "balance — expect better modeled T16 until imbalance bites",
-            EngineConfig(expand_batch=b, steal_max=128, trace_cap=TRACE),
+            EngineConfig(expand_batch=b, steal_max=128, trace_period=1, trace_cap=TRACE),
             "fused23", base,
         )
     record(
@@ -96,14 +96,14 @@ def run():
         "steals move ~10-30 nodes (measured) so a 128-slot GIVE buffer is 4x "
         "oversized: T=32 cuts the per-round ppermute payload 4x with no "
         "makespan change",
-        EngineConfig(expand_batch=32, steal_max=32, trace_cap=TRACE),
+        EngineConfig(expand_batch=32, steal_max=32, trace_period=1, trace_cap=TRACE),
         "fused23", base,
     )
     record(
         "it4-best",
         "combine the winners: fused 2-pass + B=16 (best modeled makespan) + "
         "T=32 (cheap rounds) — expect ~baseline/1.5 makespan",
-        EngineConfig(expand_batch=16, steal_max=32, trace_cap=TRACE),
+        EngineConfig(expand_batch=16, steal_max=32, trace_period=1, trace_cap=TRACE),
         "fused23", base,
     )
     save_json("perf_miner.json", iterations)

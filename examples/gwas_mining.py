@@ -32,7 +32,9 @@ def main():
     print(f"problem: {spec.name} scaled to {spec.n_items} items x "
           f"{spec.n_transactions} transactions (density {spec.density:.3f})")
 
-    session = MinerSession(runtime=RuntimeConfig(expand_batch=16, trace_cap=8192))
+    session = MinerSession(
+        runtime=RuntimeConfig(expand_batch=16, trace_period=1, trace_cap=8192)
+    )
     t0 = time.time()
     report = session.run(ds, SignificantPatternQuery(alpha=0.05))
     print(f"\nthree-phase LAMP in {time.time()-t0:.1f}s: "
@@ -57,6 +59,15 @@ def main():
     print(f"phase-2 work per miner: min={work.min()} mean={work.mean():.0f} "
           f"max={work.max()}  (imbalance {work.max()/max(work.mean(),1):.2f}x, "
           f"steals={p2.steals})")
+
+    # the decoded device superstep trace (DESIGN.md §9): the paper's "evenly
+    # distributed communication" claim, measured per superstep per miner
+    tr = p2.trace
+    print(f"phase-2 trace: {tr.n_steps} supersteps sampled, steal exchange "
+          f"fired {int(tr.fired.sum())}x, donation fairness "
+          f"{tr.donation_fairness():.2f}, work fairness "
+          f"{tr.work_fairness():.2f}, idle fraction "
+          f"{tr.idle_fraction().mean():.2f} mean")
 
     # paper §5.4: same search without stealing — a separate runtime config,
     # hence separate compiled programs, in a session of its own

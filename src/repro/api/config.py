@@ -34,6 +34,7 @@ from dataclasses import dataclass, fields, replace
 from repro.core.engine import EngineConfig
 from repro.core.expand import resolve_kernel_impl
 from repro.kernels.support_count import autotune
+from repro.obs.trace import DEFAULT_TRACE_CAP
 
 from .dataset import ShapeBucket
 
@@ -69,7 +70,12 @@ class RuntimeConfig:
     #: autotuner choose per (expand_batch, bucket tile, bucket words) at
     #: resolve time — the resolved triple joins the program cache key
     kernel_blocks: tuple[int, int, int] | None = None
-    trace_cap: int = 0
+    #: superstep trace sampling period (DESIGN.md §9): 0 = tracing off
+    #: (default); k > 0 records one TraceField row every k-th superstep.
+    #: Part of EngineConfig and hence of the program cache key — traced and
+    #: untraced sessions never share a compiled superstep program.
+    trace_period: int = 0
+    trace_cap: int = 0             # trace ring slots; 0 = default when tracing
     sync_period: int = 4           # supersteps between lambda/histogram syncs
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
     # session-level knob (NOT part of any compiled program, so it never
@@ -126,6 +132,12 @@ class RuntimeConfig:
             # program cache key) is concrete
             kernel_impl=impl,
             kernel_blocks=blocks,
-            trace_cap=self.trace_cap,
+            trace_period=self.trace_period,
+            # tracing on with no explicit ring size: supply the default cap
+            trace_cap=(
+                self.trace_cap
+                if self.trace_cap or not self.trace_period
+                else DEFAULT_TRACE_CAP
+            ),
             sync_period=self.sync_period,
         )

@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.engine import MineOutput
+from repro.obs.trace import SuperstepTrace
 from repro.results import ResultSet
 
 __all__ = ["PhaseReport", "MineReport"]
@@ -40,6 +41,10 @@ class PhaseReport:
     kernel_blocks: "tuple[int, int, int] | None" = None  # autotuned (bb, bm, bw)
     item_tile: int = 0         # tile width of the db layout (0 = untiled legacy)
     n_item_tiles: int = 1      # tiles per support-count sweep
+    # decoded device superstep timeline (repro.obs, DESIGN.md §9); present
+    # iff the session ran with trace_period > 0:
+    trace: SuperstepTrace | None = field(default=None, repr=False)
+    trace_dropped: int = 0     # sampled trace records lost to ring wrap
 
     @property
     def stats(self):

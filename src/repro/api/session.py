@@ -54,6 +54,7 @@ from repro.core.engine import (
     postprocess_phase,
 )
 from repro.core.lifeline import build_schedule
+from repro.obs import MetricsRegistry, SpanTracer
 from repro.stats import get_statistic
 
 from .config import AlgorithmConfig, RuntimeConfig
@@ -127,12 +128,40 @@ class MinerSession:
         *,
         algorithm: AlgorithmConfig | None = None,
         runtime: RuntimeConfig | None = None,
+        tracer: SpanTracer | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         self.devices = jax.devices() if devices is None else list(devices)
         self.n_devices = len(self.devices)
         self.mesh = collectives.make_miner_mesh(self.devices)
         self.algorithm = algorithm or AlgorithmConfig()
         self.runtime = runtime or RuntimeConfig()
+        # observability (DESIGN.md §9): every session gets a host span
+        # timeline and a metrics registry; callers share one across sessions
+        # (or export them) by passing their own
+        self.tracer = tracer or SpanTracer()
+        self.metrics = metrics or MetricsRegistry()
+        m = self.metrics
+        self._m_hits = m.counter(
+            "miner_cache_hits_total", "compiled-program cache hits")
+        self._m_misses = m.counter(
+            "miner_cache_misses_total", "compiled-program cache misses")
+        self._m_evictions = m.counter(
+            "miner_cache_evictions_total", "programs evicted by the LRU bound")
+        self._m_programs = m.gauge(
+            "miner_cached_programs", "compiled programs currently cached")
+        self._m_compile = m.histogram(
+            "miner_compile_seconds", "phase-program compile latency")
+        self._m_phase = m.histogram(
+            "miner_phase_seconds", "engine phase wall time", labels=("mode",))
+        self._m_query = m.histogram(
+            "miner_query_seconds", "full query wall time", labels=("query",))
+        self._m_emit_drop = m.counter(
+            "miner_emit_dropped_total",
+            "pattern records lost to out_cap saturation")
+        self._m_trace_drop = m.counter(
+            "miner_trace_dropped_total",
+            "superstep trace records lost to ring wrap")
         if self.runtime.max_programs < 1:
             raise ValueError(
                 f"RuntimeConfig.max_programs must be >= 1, got "
@@ -160,17 +189,21 @@ class MinerSession:
         entry = self._programs.get(key)
         if entry is not None:
             self._hits += 1
+            self._m_hits.inc()
             self._programs.move_to_end(key)  # most recently used
             return entry, True
         self._misses += 1
+        self._m_misses.inc()
         shardy = build_phase_program(
             (bucket.transactions, bucket.positives, bucket.items),
             cfg=cfg, schedule=self._schedule(cfg), mesh=self.mesh, mode=mode,
             statistic=statistic,
         )
         t0 = time.perf_counter()
-        compiled = jax.jit(shardy).lower(*args).compile()
+        with self.tracer.span("compile", mode=mode, statistic=statistic):
+            compiled = jax.jit(shardy).lower(*args).compile()
         compile_s = time.perf_counter() - t0
+        self._m_compile.observe(compile_s)
         try:
             cost = collectives.normalize_cost_analysis(compiled.cost_analysis())
             flops = float(cost["flops"]) if "flops" in cost else None
@@ -181,6 +214,8 @@ class MinerSession:
         while len(self._programs) > self.runtime.max_programs:
             self._programs.popitem(last=False)  # evict least recently used
             self._evictions += 1
+            self._m_evictions.inc()
+        self._m_programs.set(len(self._programs))
         return entry, False
 
     def cache_info(self) -> CacheInfo:
@@ -233,25 +268,37 @@ class MinerSession:
             get_statistic(statistic)  # actionable ValueError on typos
         t0 = time.perf_counter()
         alpha = self.algorithm.alpha if alpha is None else alpha
-        cfg = self.runtime.resolve(dataset.bucket, self.n_devices)
-        args, ctx = make_phase_args(
-            dataset.packed, n_proc=self.n_devices, cfg=cfg, mode=mode,
-            alpha=alpha, min_sup=min_sup, delta=delta, statistic=statistic,
-        )
-        # the statistic is traced only into the emission gate; lamp1/count
-        # programs are statistic-free and shared under the None key
-        stat_key = statistic if mode in ("test", "count2d") else None
-        entry, hit = self._program(mode, dataset.bucket, cfg, stat_key, args)
-        raw = entry.compiled(*args)
-        out = postprocess_phase(
-            raw, packed=dataset.packed, n_proc=self.n_devices, cfg=cfg,
-            mode=mode, thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
-            statistic=statistic,
-        )
+        with self.tracer.span(f"phase:{mode}", dataset=dataset.name):
+            cfg = self.runtime.resolve(dataset.bucket, self.n_devices)
+            with self.tracer.span("pack"):
+                args, ctx = make_phase_args(
+                    dataset.packed, n_proc=self.n_devices, cfg=cfg, mode=mode,
+                    alpha=alpha, min_sup=min_sup, delta=delta,
+                    statistic=statistic,
+                )
+            # the statistic is traced only into the emission gate; lamp1/count
+            # programs are statistic-free and shared under the None key
+            stat_key = statistic if mode in ("test", "count2d") else None
+            entry, hit = self._program(mode, dataset.bucket, cfg, stat_key,
+                                       args)
+            with self.tracer.span("dispatch", cache_hit=hit):
+                raw = entry.compiled(*args)
+            with self.tracer.span("postprocess"):
+                out = postprocess_phase(
+                    raw, packed=dataset.packed, n_proc=self.n_devices, cfg=cfg,
+                    mode=mode, thr=ctx["thr"], start_sup=ctx["start_sup"],
+                    delta=delta, statistic=statistic,
+                )
         entry.calls += 1
+        wall_s = time.perf_counter() - t0
+        self._m_phase.labels(mode=mode).observe(wall_s)
+        if out.emit_dropped:
+            self._m_emit_drop.inc(out.emit_dropped)
+        if out.trace_dropped:
+            self._m_trace_drop.inc(out.trace_dropped)
         return PhaseReport(
             mode=mode,
-            wall_s=time.perf_counter() - t0,
+            wall_s=wall_s,
             compile_s=0.0 if hit else entry.compile_s,
             cache_hit=hit,
             supersteps=out.supersteps,
@@ -267,6 +314,8 @@ class MinerSession:
             kernel_blocks=cfg.kernel_blocks,
             item_tile=dataset.bucket.item_tile,
             n_item_tiles=dataset.bucket.n_tiles,
+            trace=out.trace,
+            trace_dropped=out.trace_dropped,
         )
 
     # --------------------------------------------------------------- queries
@@ -277,7 +326,14 @@ class MinerSession:
                 f"run() takes a repro.api.Query (e.g. "
                 f"SignificantPatternQuery(alpha=0.05)), got {type(query).__name__}"
             )
-        return query.run(self, dataset)
+        t0 = time.perf_counter()
+        with self.tracer.span(f"query:{type(query).__name__}",
+                              dataset=dataset.name):
+            report = query.run(self, dataset)
+        self._m_query.labels(query=report.query).observe(
+            time.perf_counter() - t0
+        )
+        return report
 
     def mine(
         self,
@@ -325,14 +381,15 @@ class MinerSession:
             if records is None else records
         )
         # the dataset was packed exactly once; reconstruction reuses its bits
-        return build_result_set(
-            occ, sup, pos_sup,
-            dataset.packed.db_bits,
-            n=dataset.n_transactions, n_pos=dataset.n_pos, alpha=alpha,
-            min_sup=min_sup, correction_factor=k, delta=delta,
-            filter_host=filter_host, dropped=phase_out.emit_dropped,
-            item_names=dataset.item_names, statistic=statistic,
-        )
+        with self.tracer.span("reconstruct", n_records=len(sup)):
+            return build_result_set(
+                occ, sup, pos_sup,
+                dataset.packed.db_bits,
+                n=dataset.n_transactions, n_pos=dataset.n_pos, alpha=alpha,
+                min_sup=min_sup, correction_factor=k, delta=delta,
+                filter_host=filter_host, dropped=phase_out.emit_dropped,
+                item_names=dataset.item_names, statistic=statistic,
+            )
 
     def _root_record(self, dataset: Dataset, phase_out: MineOutput,
                      statistic: str | None, delta: float, min_sup: int):

@@ -77,6 +77,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.obs.trace import N_FIELDS, SuperstepTrace, decode_trace
 from repro.stats import get_statistic
 
 from . import collectives
@@ -120,7 +121,11 @@ class EngineConfig:
     #: the autotuner choose at trace time.  RuntimeConfig.resolve pins the
     #: tuned triple here so it joins the compiled-program cache key.
     kernel_blocks: tuple[int, int, int] | None = None
-    trace_cap: int = 0             # >0: record popped-per-superstep [trace_cap]
+    #: superstep trace sampling period: 0 = off; k > 0 records one
+    #: [N_FIELDS]i32 record (repro.obs.trace.TraceField) every k-th
+    #: superstep into a [trace_cap, N_FIELDS] device ring (DESIGN.md §9)
+    trace_period: int = 0
+    trace_cap: int = 0             # ring slots; required > 0 when tracing
     sync_period: int = 4           # supersteps between lambda/histogram syncs
 
 
@@ -133,12 +138,13 @@ class MineOutput:
     sig_count: int = 0             # mode="test"
     sig_sup: np.ndarray | None = None
     sig_pos_sup: np.ndarray | None = None
-    trace: np.ndarray | None = None  # [P, trace_cap] popped per superstep
+    trace: SuperstepTrace | None = None  # decoded ring (trace_period > 0)
     hist2d: np.ndarray | None = None  # [N+1, Npos+1] (mode="count2d")
     # emitted pattern records (modes "test"/"count2d"; DESIGN.md §4):
     sig_occ: np.ndarray | None = None   # [K, W]u32 occurrence bitmaps
     sig_core: np.ndarray | None = None  # [K] core item of the emitting node
     emit_dropped: int = 0          # records lost to out_cap saturation
+    trace_dropped: int = 0         # sampled trace records lost to ring wrap
     db_bits: np.ndarray | None = None  # [M, W]u32 packed DB (reused downstream)
 
 
@@ -353,6 +359,14 @@ def build_mine_step(
     set); it is traced into the program, so fisher/chi2/None programs are
     distinct compilation artifacts.
     """
+    if cfg.trace_period < 0:
+        raise ValueError(f"trace_period must be >= 0, got {cfg.trace_period}")
+    if cfg.trace_period and cfg.trace_cap <= 0:
+        raise ValueError(
+            "trace_period > 0 requires trace_cap > 0 (the ring needs slots); "
+            "RuntimeConfig.resolve() defaults the cap when only the period "
+            "is set"
+        )
     NB = n + 2
     NB2 = (n + 1) * (n_pos + 1) if mode == "count2d" else 1
     # lambda-sync state (last-synced global hist + local snapshot) only
@@ -369,16 +383,12 @@ def build_mine_step(
     def body(carry, db_tiles, pos_mask, thr, delta, n_act, npos_act):
         (occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc, hist2d, lam,
          t, stats, out_occ, out_meta, out_ptr, n_sig, trace, _work) = carry
-        popped_before = stats[Stat.POPPED]
+        stats_before = stats
         (occ_stack, meta, sp, hist, hist2d, stats, out_occ, out_meta, out_ptr,
          sig_cnt) = expand(
             occ_stack, meta, sp, head, hist, hist2d, lam, stats, db_tiles,
             pos_mask, out_occ, out_meta, out_ptr, delta, n_act, npos_act,
         )
-        if cfg.trace_cap:
-            trace = trace.at[jnp.minimum(t, cfg.trace_cap - 1)].add(
-                stats[Stat.POPPED] - popped_before
-            )
         n_sig = n_sig + sig_cnt
         # the [P]-int hunger census: REQUEST side of the steal exchange,
         # gate for its payload ppermute, and the exact termination test
@@ -387,7 +397,7 @@ def build_mine_step(
         hungry_vec = hunger_census(sp, n_proc, axis)
         n_hungry = jnp.sum(hungry_vec)
         if cfg.steal_enabled:
-            occ_stack, meta, sp, head, got, gave, k_given = steal_round(
+            occ_stack, meta, sp, head, got, gave, k_given, k_recv = steal_round(
                 t, hungry_vec, n_hungry, occ_stack, meta, sp, head
             )
             stats = stats.at[Stat.STEALS_GOT].add(got)
@@ -396,8 +406,38 @@ def build_mine_step(
             stats = stats.at[Stat.STEAL_ROUNDS].add(
                 (n_hungry > 0).astype(jnp.int32)
             )
+        else:
+            k_given = k_recv = jnp.int32(0)
         stats = stats.at[Stat.IDLE_STEPS].add((sp == 0).astype(jnp.int32))
         stats = stats.at[Stat.SUPERSTEPS].add(1)
+
+        if cfg.trace_period:
+            # record *before* global_sync so LAMBDA is the value in force
+            # during this superstep's expand; volumes are this-step stat
+            # deltas.  Unsampled steps write to slot == trace_cap, which
+            # mode="drop" discards — no branch, no psum, one 11-int store.
+            deltas = stats - stats_before
+            fired = (n_hungry > 0) & bool(cfg.steal_enabled)
+            rec = jnp.stack([
+                t,                           # TraceField.STEP
+                lam,                         # TraceField.LAMBDA
+                sp,                          # TraceField.DEPTH
+                n_hungry,                    # TraceField.HUNGRY
+                fired.astype(jnp.int32),     # TraceField.FIRED
+                deltas[Stat.POPPED],         # TraceField.POPPED
+                deltas[Stat.PUSHED],         # TraceField.PUSHED
+                deltas[Stat.CLOSED],         # TraceField.CLOSED
+                sig_cnt,                     # TraceField.EMITTED
+                k_given,                     # TraceField.DONATED
+                k_recv,                      # TraceField.RECEIVED
+            ]).astype(jnp.int32)
+            sampled = (t % cfg.trace_period) == 0
+            idx = t // cfg.trace_period
+            slot = jnp.where(sampled, idx % cfg.trace_cap, cfg.trace_cap)
+            trace = trace.at[slot].set(rec, mode="drop")
+            stats = stats.at[Stat.TRACE_DROPPED].add(
+                (sampled & (idx >= cfg.trace_cap)).astype(jnp.int32)
+            )
 
         lam, g_hist_acc, hist_snap = global_sync(
             t, hist, hist_snap, g_hist_acc, lam, thr
@@ -425,7 +465,9 @@ def build_mine_step(
         out_ptr = jnp.int32(0)
         n_sig = jnp.int32(0)
         t = jnp.int32(0)
-        trace = jnp.zeros(max(cfg.trace_cap, 1), jnp.int32)
+        # the superstep trace ring ([trace_cap, N_FIELDS] i32 per miner);
+        # a 1-slot dummy keeps the carry structure static when tracing is off
+        trace = jnp.zeros((max(cfg.trace_cap, 1), N_FIELDS), jnp.int32)
 
         def cond_fn(carry):
             (_occ, _meta, _sp, _head, _hist, _snap, _ghist, _hist2d, _lam, t,
@@ -608,6 +650,24 @@ def postprocess_phase(
         hist2d = hist2d[: n + 1, : n_pos + 1].copy()
         if root_sup >= start_sup:
             hist2d[root_sup if root_sup <= n else n, n_pos] += 1
+
+    trace_dec = None
+    trace_dropped = 0
+    if cfg.trace_period:
+        trace_dec = decode_trace(
+            trace, supersteps=int(t), period=cfg.trace_period
+        )
+        trace_dropped = trace_dec.dropped
+        if trace_dropped:
+            warnings.warn(
+                f"superstep trace ring wrapped: {trace_dropped} oldest "
+                f"sampled records overwritten (trace_cap={cfg.trace_cap}, "
+                f"trace_period={cfg.trace_period}, {int(t)} supersteps); "
+                "the decoded timeline covers only the most recent window — "
+                "raise trace_cap or trace_period",
+                RuntimeWarning,
+                stacklevel=3,
+            )
     return MineOutput(
         hist=g_hist,
         lam_final=int(lam),
@@ -616,11 +676,12 @@ def postprocess_phase(
         sig_count=n_sig,
         sig_sup=sig_sup,
         sig_pos_sup=sig_pos,
-        trace=trace if cfg.trace_cap else None,
+        trace=trace_dec,
         hist2d=hist2d,
         sig_occ=sig_occ,
         sig_core=sig_core,
         emit_dropped=emit_dropped,
+        trace_dropped=trace_dropped,
         db_bits=packed.db_bits,
     )
 

@@ -29,6 +29,7 @@ class Stat(enum.IntEnum):
     STOLEN_NODES = 9   # total nodes donated
     EMIT_DROPPED = 10  # pattern records lost to out_cap saturation
     STEAL_ROUNDS = 11  # hunger-gated exchange rounds actually executed
+    TRACE_DROPPED = 12  # sampled trace records lost to ring saturation
 
 
 STAT_NAMES = tuple(s.name.lower() for s in Stat)

@@ -45,7 +45,7 @@ __all__ = ["build_steal_round"]
 
 def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
     """Returns steal_round(t, hungry_vec, n_hungry, occ_stack, meta, sp, head)
-    -> (occ_stack, meta, sp, head, got, gave, k_given).
+    -> (occ_stack, meta, sp, head, got, gave, k_given, k_recv).
 
     `hungry_vec` [P] is the superstep's hunger census (1 per empty miner),
     `n_hungry` its sum; both are replicated psum results, so the `lax.cond`
@@ -123,6 +123,6 @@ def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
         )
         sp = jnp.where(got, recv_k, sp)
         return (occ_stack, meta, sp, head, got.astype(jnp.int32),
-                donate.astype(jnp.int32), k)
+                donate.astype(jnp.int32), k, jnp.where(got, recv_k, 0))
 
     return steal_round

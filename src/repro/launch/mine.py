@@ -22,6 +22,13 @@ jax device set is used.  --no-steal reproduces the paper's naive baseline.
 deliverable) and --patterns-out exports the full ResultSet as TSV/JSON.
 Per-miner stacks are auto-sized by `RuntimeConfig.resolve` (items per miner,
 clamped by word-width-aware stack memory); --stack-cap overrides.
+
+Observability (repro.obs, DESIGN.md §9): --verbose streams structured
+JSON-lines run records (kernel provenance, per-phase walls, cache state) to
+stderr; --trace-period N samples the on-device superstep trace every N
+supersteps and prints its load-balance summary; --trace-out exports the
+host span timeline as Chrome-trace JSON (open in ui.perfetto.dev);
+--metrics-out snapshots the session's Prometheus metrics.
 """
 
 from __future__ import annotations
@@ -73,6 +80,18 @@ def main(argv=None):
     ap.add_argument("--out-cap", type=int, default=4096,
                     help="per-miner pattern emission buffer capacity")
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--verbose", action="store_true",
+                    help="stream structured JSON-lines run records to stderr")
+    ap.add_argument("--trace-period", type=int, default=0,
+                    help="sample the device superstep trace every N "
+                         "supersteps (0 = off)")
+    ap.add_argument("--trace-cap", type=int, default=0,
+                    help="trace ring slots per miner (0 = default when "
+                         "tracing)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the host span timeline as Chrome-trace JSON")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a Prometheus text-format metrics snapshot")
     args = ap.parse_args(argv)
 
     if args.query == "closed-frequent" and args.min_sup < 1:
@@ -96,18 +115,24 @@ def main(argv=None):
         SignificantPatternQuery,
         TopKSignificantQuery,
     )
+    from repro.obs import JsonlLogger
     from repro.results import score_planted
 
     if args.pipeline not in PIPELINES:
         ap.error(f"--pipeline: unknown {args.pipeline!r}; "
                  f"available: {sorted(PIPELINES)}")
 
+    log = JsonlLogger() if args.verbose else None
     ds = Dataset.from_paper_problem(
         args.problem, args.scale_items, args.scale_trans
     )
     spec = ds.spec
     print(f"[data] {spec.name}: {spec.n_items} items x {spec.n_transactions} "
           f"transactions, density {spec.density:.3f}, N_pos {spec.n_pos}")
+    if log:
+        log.event("data", problem=spec.name, items=spec.n_items,
+                  transactions=spec.n_transactions, n_pos=spec.n_pos,
+                  density=round(spec.density, 4))
 
     session = MinerSession(
         algorithm=AlgorithmConfig(alpha=args.alpha, statistic=args.stat,
@@ -119,6 +144,8 @@ def main(argv=None):
             kernel_impl=args.kernel,
             sync_period=args.sync_period,
             out_cap=args.out_cap,
+            trace_period=args.trace_period,
+            trace_cap=args.trace_cap,
             # stack_cap=None: sized by RuntimeConfig.resolve for the
             # dataset's bucket and the devices actually available
             stack_cap=args.stack_cap or None,
@@ -135,6 +162,17 @@ def main(argv=None):
     t0 = time.time()
     report = session.run(ds, query)
     dt = time.time() - t0
+    if log:
+        for p in report.phases:
+            log.event(
+                "phase", mode=p.mode, wall_s=round(p.wall_s, 4),
+                compile_s=round(p.compile_s, 4), cache_hit=p.cache_hit,
+                supersteps=p.supersteps, lam_final=p.lam_final,
+                n_nodes=p.n_nodes, steal_rounds=p.steal_rounds,
+                kernel_impl=p.kernel_impl, kernel_blocks=p.kernel_blocks,
+                item_tile=p.item_tile, emit_dropped=p.emit_dropped,
+                trace_dropped=p.trace_dropped,
+            )
     # per-device work telemetry: the count phase for the LAMP staging
     # (phases[1], the historical meaning of these JSON keys); objectives
     # with a single/variable staging report their last traversal
@@ -162,7 +200,19 @@ def main(argv=None):
     }
     if report.query == "significant":
         out["planted_recall"] = score_planted(rs, ds.planted)["recall"]
+    if args.trace_period:
+        # the work phase's decoded device timeline, as load-balance metrics
+        wp = (report.phases[1] if report.query == "significant"
+              and len(report.phases) > 1 else report.phases[-1])
+        if wp.trace is not None:
+            out["superstep_trace"] = wp.trace.summary()
     print(json.dumps(out, indent=1, default=str))
+    if log:
+        ci = session.cache_info()
+        log.event("run", **out,
+                  cache={"hits": ci.hits, "misses": ci.misses,
+                         "evictions": ci.evictions,
+                         "programs": ci.n_programs})
 
     planted = ds.planted if report.statistic is not None else None
     print("\n" + rs.describe(args.top_k, planted=planted))
@@ -173,6 +223,14 @@ def main(argv=None):
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(out, f, default=str)
+    if args.trace_out:
+        session.tracer.save(args.trace_out)
+        print(f"[out] wrote host span timeline to {args.trace_out} "
+              "(open in ui.perfetto.dev)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(session.metrics.expose_text())
+        print(f"[out] wrote metrics snapshot to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,12 @@ program per phase); every later query replays warm compiled programs with
 zero re-traces.  Prints per-query latencies, a latency histogram, the
 cold/warm ratio, and the session's program-cache stats.
 
-  --smoke      CI-sized: tiny scales, 4 queries (used by the slow-system job)
-  --json-out   machine-readable latencies + cache stats
+  --smoke        CI-sized: tiny scales, 4 queries (used by the slow-system job)
+  --json-out     machine-readable latencies + cache stats
+  --verbose      structured JSON-lines query records to stderr (repro.obs)
+  --metrics-out  Prometheus text snapshot of the session registry: cache
+                 hits/misses/evictions, per-phase and per-query latency
+                 histograms, telemetry-loss counters (DESIGN.md §9)
 """
 
 from __future__ import annotations
@@ -76,6 +80,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: tiny scales and 4 queries")
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--verbose", action="store_true",
+                    help="stream structured JSON-lines query records to stderr")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a Prometheus text-format metrics snapshot")
     args = ap.parse_args(argv)
     if args.queries < 1:
         ap.error("--queries must be >= 1")
@@ -93,7 +101,9 @@ def main(argv=None):
     from repro.api import (
         PIPELINES, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
     )
+    from repro.obs import JsonlLogger
 
+    log = JsonlLogger() if args.verbose else None
     if args.pipeline not in PIPELINES:
         ap.error(f"--pipeline: unknown {args.pipeline!r}; "
                  f"available: {sorted(PIPELINES)}")
@@ -128,6 +138,15 @@ def main(argv=None):
         print(f"[q{q:03d}] {tag} {dt * 1e3:9.1f}ms  alpha={alpha:<5} "
               f"min_sup={report.min_sup} k={report.correction_factor} "
               f"significant={report.n_significant}")
+        if log:
+            log.event(
+                "query", q=q, cold=report.cold, wall_s=round(dt, 4),
+                alpha=alpha, min_sup=report.min_sup,
+                k=report.correction_factor,
+                significant=report.n_significant,
+                kernel_impl=report.kernel_impl,
+                phase_wall_s=[round(p.wall_s, 4) for p in report.phases],
+            )
         if args.top_k:
             for line in report.results.describe(args.top_k).splitlines()[1:]:
                 print("   " + line)
@@ -159,6 +178,13 @@ def main(argv=None):
     # compile per phase of the pipeline, ever
     assert ci.misses == n_phases, \
         f"expected {n_phases} compiles, saw {ci.misses}"
+    if log:
+        log.event("serve", **{k: v for k, v in summary.items()},
+                  cache_hits=ci.hits, cache_misses=ci.misses)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(session.metrics.expose_text())
+        print(f"[out] wrote metrics snapshot to {args.metrics_out}")
 
     if args.json_out:
         payload = dict(

@@ -167,6 +167,38 @@ def main():
             "steals_got": res.stats["steals_got"].tolist(),
             "gives": res.stats["gives"].tolist(),
         }
+    elif spec["mode"] == "trace_parity":
+        # the same pass traced vs untraced on this device count: results
+        # must be bit-identical, and the decoded trace must reconcile with
+        # the engine's cumulative per-miner counters
+        import dataclasses
+
+        res_off = mine(db, labels, mode="lamp1", cfg=cfg)
+        cfg_on = dataclasses.replace(
+            cfg, trace_period=spec.get("trace_period", 1),
+            trace_cap=spec.get("trace_cap", 4096),
+        )
+        res_on = mine(db, labels, mode="lamp1", cfg=cfg_on)
+        tr = res_on.trace
+        out = {
+            "hist_equal": res_off.hist.tolist() == res_on.hist.tolist(),
+            "lam_equal": res_off.lam_final == res_on.lam_final,
+            "supersteps_equal": res_off.supersteps == res_on.supersteps,
+            "supersteps": res_on.supersteps,
+            "sampled_steps": tr.n_steps,
+            "dropped": tr.dropped,
+            "steps_monotone": bool(np.all(np.diff(tr.steps) > 0)),
+            "depth_nonneg": bool(np.all(tr.depth >= 0)),
+            "popped_matches_stats": (
+                tr.popped.sum(axis=1).tolist()
+                == res_on.stats["popped"].tolist()
+            ),
+            "fired_matches_stats": (
+                int(tr.fired.sum()) == int(res_on.stats["steal_rounds"][0])
+            ),
+            "donation_fairness": tr.donation_fairness(),
+            "summary": tr.summary(),
+        }
     print(json.dumps(out))
 
 
