@@ -191,6 +191,42 @@ class Dataset:
 
     # ---------------------------------------------------------- constructors
     @classmethod
+    def placeholder(cls, bucket: ShapeBucket, *, name: str = "warmup") -> "Dataset":
+        """A minimal labelled dataset padded into exactly `bucket`.
+
+        Compiled programs depend on the bucket dims and config only — actual
+        data enters as runtime arguments — so `MinerSession.warmup(bucket)`
+        uses this to shape the program arguments without any real data: two
+        transactions (one positive), one item, all-zero bits, zero cost at
+        any bucket size (padding is packed words, not a dense matrix).
+        """
+        if not isinstance(bucket, ShapeBucket):
+            raise TypeError(
+                f"placeholder() takes a ShapeBucket, got {type(bucket).__name__}"
+            )
+        n = min(2, bucket.transactions)
+        if n < 1 or bucket.positives < 1:
+            raise ValueError(f"bucket too small to placeholder: {bucket}")
+        labels = np.zeros(n, dtype=bool)
+        labels[0] = True
+        labels.flags.writeable = False
+        ds = cls.__new__(cls)
+        ds.name = str(name)
+        ds.labels = labels
+        ds.item_names = None
+        ds.planted = None
+        ds.bucket = bucket
+        ds.packed = pack_problem(
+            np.zeros((n, 1), dtype=bool),
+            labels,
+            n_pad=bucket.transactions,
+            npos_pad=bucket.positives,
+            m_pad=bucket.items,
+            m_tile=bucket.tile,
+        )
+        return ds
+
+    @classmethod
     def from_dense(
         cls,
         db_bool: np.ndarray,

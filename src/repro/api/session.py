@@ -31,10 +31,20 @@ and `mine(...)` survives as a thin wrapper that builds a
 SignificantPatternQuery from the session's AlgorithmConfig.  The LAMP
 stagings themselves (`PIPELINES`: "three_phase" | "fused23") are functions
 over a session, sharing its packed dataset and warm programs across phases.
+
+Thread-safety contract (DESIGN.md §10): a session executes **one query at a
+time** — `run` / `mine` / `run_phase` must never be called concurrently
+from multiple threads (the serve fleet enforces this by pinning each
+session to its own single-thread executor).  The program cache itself is
+lock-protected, so the *introspection and warmup* surface —
+`cache_info()`, `has_programs()`, `clear_cache()`, `warmup()` — is safe to
+call from other threads while a query runs (warmup compiles outside the
+lock; a lost compile race keeps the first-inserted program).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -62,7 +72,15 @@ from .dataset import Dataset, ShapeBucket
 from .query import Query, SignificantPatternQuery
 from .report import MineReport, PhaseReport
 
-__all__ = ["CacheInfo", "MinerSession", "PIPELINES", "ProgramInfo"]
+__all__ = ["CacheInfo", "MinerSession", "PIPELINES", "PIPELINE_MODES",
+           "ProgramInfo"]
+
+#: engine modes each LAMP staging compiles — the warmup/affinity surface
+#: (serve.fleet) uses this to decide what "fully warm for a bucket" means
+PIPELINE_MODES: dict[str, tuple[str, ...]] = {
+    "three_phase": ("lamp1", "count", "test"),
+    "fused23": ("lamp1", "count2d"),
+}
 
 #: sentinel distinguishing "argument omitted" from an explicit None —
 #: statistic=None elsewhere means "no test", which mine() must reject
@@ -174,6 +192,13 @@ class MinerSession:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        # guards the program cache + counters only (queries stay single-
+        # threaded per session; see the class docstring's contract) so
+        # cache_info/has_programs/warmup are safe from other threads
+        self._cache_lock = threading.RLock()
+        # one-shot ResultStream installed by run(stream=...), consumed by
+        # _build_results mid-query (same thread)
+        self._stream = None
 
     # -------------------------------------------------------------- programs
     def _schedule(self, cfg: EngineConfig):
@@ -184,16 +209,22 @@ class MinerSession:
 
     def _program(self, mode: str, bucket: ShapeBucket, cfg: EngineConfig,
                  statistic: str | None, args):
-        """Fetch-or-compile the phase program for (mode, bucket, cfg, stat)."""
+        """Fetch-or-compile the phase program for (mode, bucket, cfg, stat).
+
+        The (long) build+compile runs outside the cache lock so a warmup
+        thread never stalls a running query's cache lookups; a concurrent
+        compile of the same key is a benign race — first insert wins.
+        """
         key = (mode, bucket, cfg, statistic)
-        entry = self._programs.get(key)
-        if entry is not None:
-            self._hits += 1
-            self._m_hits.inc()
-            self._programs.move_to_end(key)  # most recently used
-            return entry, True
-        self._misses += 1
-        self._m_misses.inc()
+        with self._cache_lock:
+            entry = self._programs.get(key)
+            if entry is not None:
+                self._hits += 1
+                self._m_hits.inc()
+                self._programs.move_to_end(key)  # most recently used
+                return entry, True
+            self._misses += 1
+            self._m_misses.inc()
         shardy = build_phase_program(
             (bucket.transactions, bucket.positives, bucket.items),
             cfg=cfg, schedule=self._schedule(cfg), mesh=self.mesh, mode=mode,
@@ -210,25 +241,32 @@ class MinerSession:
         except Exception:  # backend without cost analysis
             flops = None
         entry = _Program(compiled, compile_s, flops)
-        self._programs[key] = entry
-        while len(self._programs) > self.runtime.max_programs:
-            self._programs.popitem(last=False)  # evict least recently used
-            self._evictions += 1
-            self._m_evictions.inc()
-        self._m_programs.set(len(self._programs))
+        with self._cache_lock:
+            existing = self._programs.get(key)
+            if existing is not None:  # another thread won the compile race
+                self._programs.move_to_end(key)
+                return existing, True
+            self._programs[key] = entry
+            while len(self._programs) > self.runtime.max_programs:
+                self._programs.popitem(last=False)  # evict least recently used
+                self._evictions += 1
+                self._m_evictions.inc()
+            self._m_programs.set(len(self._programs))
         return entry, False
 
     def cache_info(self) -> CacheInfo:
-        return CacheInfo(
-            hits=self._hits,
-            misses=self._misses,
-            evictions=self._evictions,
-            programs=tuple(
-                ProgramInfo(mode=key[0], bucket=key[1], compile_s=p.compile_s,
-                            calls=p.calls, flops=p.flops, statistic=key[3])
-                for key, p in self._programs.items()
-            ),
-        )
+        with self._cache_lock:
+            return CacheInfo(
+                hits=self._hits,
+                misses=self._misses,
+                evictions=self._evictions,
+                programs=tuple(
+                    ProgramInfo(mode=key[0], bucket=key[1],
+                                compile_s=p.compile_s, calls=p.calls,
+                                flops=p.flops, statistic=key[3])
+                    for key, p in self._programs.items()
+                ),
+            )
 
     def clear_cache(self) -> int:
         """Drop every cached compiled program; returns how many were held.
@@ -236,9 +274,83 @@ class MinerSession:
         Hit/miss/eviction counters are preserved (a clear is not an LRU
         eviction); the next query of any (mode, bucket, statistic) recompiles.
         """
-        n = len(self._programs)
-        self._programs.clear()
-        return n
+        with self._cache_lock:
+            n = len(self._programs)
+            self._programs.clear()
+            return n
+
+    # --------------------------------------------------------------- warmup
+    def _pipeline_modes(self, pipeline: str | None) -> tuple[str, ...]:
+        pipeline = pipeline or self.algorithm.pipeline
+        try:
+            return PIPELINE_MODES[pipeline]
+        except KeyError:
+            raise ValueError(
+                f"unknown pipeline {pipeline!r}; available: "
+                f"{sorted(PIPELINE_MODES)}"
+            ) from None
+
+    def has_programs(
+        self,
+        bucket: ShapeBucket,
+        statistic: str | None = _USE_SESSION_DEFAULT,
+        *,
+        pipeline: str | None = None,
+    ) -> bool:
+        """True when every phase program `pipeline` needs for this bucket
+        (under `statistic`) is already compiled — i.e. a significant-pattern
+        query on any same-bucket dataset would dispatch fully warm.  The
+        serve fleet's affinity scoring keys on this (DESIGN.md §10)."""
+        if statistic is _USE_SESSION_DEFAULT:
+            statistic = self.algorithm.statistic
+        modes = self._pipeline_modes(pipeline)
+        cfg = self.runtime.resolve(bucket, self.n_devices)
+        with self._cache_lock:
+            return all(
+                (mode, bucket, cfg,
+                 statistic if mode in ("test", "count2d") else None)
+                in self._programs
+                for mode in modes
+            )
+
+    def warmup(
+        self,
+        target,
+        *,
+        statistic: str | None = _USE_SESSION_DEFAULT,
+        pipeline: str | None = None,
+        alpha: float | None = None,
+    ) -> int:
+        """Pre-compile every phase program for a bucket before traffic needs
+        it — the serve fleet's startup policy (DESIGN.md §10).
+
+        `target` is a `ShapeBucket` (a placeholder dataset is synthesized to
+        shape the program arguments; no real data required) or a `Dataset`
+        (its bucket is warmed and its packed bits reused).  Returns the
+        number of programs actually compiled (0 = was already fully warm).
+        Safe to call from a different thread than the query thread.
+        """
+        if statistic is _USE_SESSION_DEFAULT:
+            statistic = self.algorithm.statistic
+        if statistic is not None:
+            get_statistic(statistic)  # actionable ValueError on typos
+        modes = self._pipeline_modes(pipeline)
+        ds = target if isinstance(target, Dataset) else \
+            Dataset.placeholder(target)
+        alpha = self.algorithm.alpha if alpha is None else alpha
+        cfg = self.runtime.resolve(ds.bucket, self.n_devices)
+        compiled = 0
+        with self.tracer.span("warmup", statistic=statistic,
+                              bucket=str(ds.bucket)):
+            for mode in modes:
+                args, _ = make_phase_args(
+                    ds.packed, n_proc=self.n_devices, cfg=cfg, mode=mode,
+                    alpha=alpha, min_sup=1, delta=0.0, statistic=statistic,
+                )
+                stat_key = statistic if mode in ("test", "count2d") else None
+                _, hit = self._program(mode, ds.bucket, cfg, stat_key, args)
+                compiled += 0 if hit else 1
+        return compiled
 
     # ---------------------------------------------------------------- phases
     def run_phase(
@@ -319,17 +431,28 @@ class MinerSession:
         )
 
     # --------------------------------------------------------------- queries
-    def run(self, dataset: Dataset, query: Query) -> MineReport:
-        """Execute one first-class query object (repro.api.query)."""
+    def run(self, dataset: Dataset, query: Query, *, stream=None) -> MineReport:
+        """Execute one first-class query object (repro.api.query).
+
+        `stream` (a `repro.results.ResultStream`) delivers the final
+        top-`head_k` patterns to a callback *during* result construction —
+        before full reconstruction finishes — for the serving layer's
+        top-k-first delivery (DESIGN.md §10).  The returned report is
+        identical with or without it.
+        """
         if not isinstance(query, Query):
             raise TypeError(
                 f"run() takes a repro.api.Query (e.g. "
                 f"SignificantPatternQuery(alpha=0.05)), got {type(query).__name__}"
             )
         t0 = time.perf_counter()
-        with self.tracer.span(f"query:{type(query).__name__}",
-                              dataset=dataset.name):
-            report = query.run(self, dataset)
+        self._stream = stream
+        try:
+            with self.tracer.span(f"query:{type(query).__name__}",
+                                  dataset=dataset.name):
+                report = query.run(self, dataset)
+        finally:
+            self._stream = None
         self._m_query.labels(query=report.query).observe(
             time.perf_counter() - t0
         )
@@ -380,6 +503,9 @@ class MinerSession:
             (phase_out.sig_occ, phase_out.sig_sup, phase_out.sig_pos_sup)
             if records is None else records
         )
+        # consume the one-shot stream installed by run(stream=...) — a
+        # multi-phase pipeline builds results exactly once, at the end
+        stream, self._stream = self._stream, None
         # the dataset was packed exactly once; reconstruction reuses its bits
         with self.tracer.span("reconstruct", n_records=len(sup)):
             return build_result_set(
@@ -389,6 +515,7 @@ class MinerSession:
                 min_sup=min_sup, correction_factor=k, delta=delta,
                 filter_host=filter_host, dropped=phase_out.emit_dropped,
                 item_names=dataset.item_names, statistic=statistic,
+                stream=stream,
             )
 
     def _root_record(self, dataset: Dataset, phase_out: MineOutput,

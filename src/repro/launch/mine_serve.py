@@ -1,63 +1,36 @@
-"""Query-serving loop: N significant-pattern queries against one warm session.
+"""Query-serving CLI: N significant-pattern queries through repro.serve.
 
   python -m repro.launch.mine_serve --problem hapmap_dom_10 --scale-items 0.02 \
-      --devices 8 --queries 16
+      --devices 8 --queries 16 --concurrency 2
 
-The deployment mode the session API exists for (ROADMAP north star: heavy
-repeated query traffic): a `MinerSession` is built once; a queue of queries
-— fresh same-shape datasets (reseeded synthetic cohorts) × a cycle of
-significance levels — drains against it.  Query 0 is cold (compiles one
-program per phase); every later query replays warm compiled programs with
-zero re-traces.  Prints per-query latencies, a latency histogram, the
-cold/warm ratio, and the session's program-cache stats.
+A thin client of the async mining service (DESIGN.md §10): it pre-builds
+the query workload (reseeded same-shape synthetic cohorts × a cycle of
+significance levels), starts a `MiningService` — a fleet of
+`--concurrency` warm sessions behind the admission-controlled scheduler —
+warms the workload's shape bucket before any traffic, then drains the
+queries closed-loop and prints per-query lines as results resolve.
+`--concurrency 1` is the serial mode (one session, one in flight), the
+like-for-like successor of the old in-process loop.
+
+Every query should dispatch fully warm (the bucket is pre-compiled at
+startup); queries that still compiled something are *counted* and
+surfaced as `warm_violations` in the summary instead of tripping an
+assert, so operators see degradation without the tool dying mid-run.
 
   --smoke        CI-sized: tiny scales, 4 queries (used by the slow-system job)
   --json-out     machine-readable latencies + cache stats
   --verbose      structured JSON-lines query records to stderr (repro.obs)
-  --metrics-out  Prometheus text snapshot of the session registry: cache
-                 hits/misses/evictions, per-phase and per-query latency
-                 histograms, telemetry-loss counters (DESIGN.md §9)
+  --metrics-out  Prometheus text snapshot of the shared service registry:
+                 serve_* scheduler metrics + miner_* session metrics
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import sys
 import time
-from collections import deque
-
-
-def percentile(xs, q):
-    xs = sorted(xs)
-    if not xs:
-        return 0.0
-    i = min(int(round(q / 100 * (len(xs) - 1))), len(xs) - 1)
-    return xs[i]
-
-
-def latency_histogram(lat_s, width=40) -> str:
-    """Log2-bucket text histogram over milliseconds."""
-    if not lat_s:
-        return "(no samples)"
-    ms = [x * 1e3 for x in lat_s]
-    lo = min(ms)
-    edge = 1.0
-    while edge > lo:
-        edge /= 2
-    buckets: dict[float, int] = {}
-    for x in ms:
-        e = edge
-        while e * 2 <= x:
-            e *= 2
-        buckets[e] = buckets.get(e, 0) + 1
-    peak = max(buckets.values())
-    lines = []
-    for e in sorted(buckets):
-        n = buckets[e]
-        bar = "#" * max(1, round(width * n / peak))
-        lines.append(f"  [{e:9.1f}ms, {e * 2:9.1f}ms)  {n:4d}  {bar}")
-    return "\n".join(lines)
 
 
 def main(argv=None):
@@ -70,13 +43,20 @@ def main(argv=None):
                     help="comma-separated significance levels cycled across queries")
     ap.add_argument("--pipeline", default="three_phase")
     ap.add_argument("--stat", default="fisher", choices=["fisher", "chi2"],
-                    help="test statistic served by the session")
+                    help="test statistic served by the sessions")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--expand-batch", type=int, default=16)
     ap.add_argument("--kernel", default="ref",
                     choices=["ref", "pallas", "pallas_interpret"])
     ap.add_argument("--top-k", type=int, default=3,
                     help="patterns shown per query (0 = summary line only)")
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="session fleet size AND in-flight clients "
+                         "(1 = serial serving)")
+    ap.add_argument("--queue-capacity", type=int, default=64,
+                    help="admission bound of the scheduler queue")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-query deadline (default: none)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: tiny scales and 4 queries")
     ap.add_argument("--json-out", default="")
@@ -87,6 +67,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.queries < 1:
         ap.error("--queries must be >= 1")
+    if args.concurrency < 1:
+        ap.error("--concurrency must be >= 1")
     if args.smoke:
         args.scale_items = min(args.scale_items, 0.01)
         args.queries = min(args.queries, 4)
@@ -99,9 +81,14 @@ def main(argv=None):
                   "ignored (set XLA_FLAGS before launch)", file=sys.stderr)
 
     from repro.api import (
-        PIPELINES, AlgorithmConfig, Dataset, MinerSession, RuntimeConfig,
+        PIPELINES, AlgorithmConfig, Dataset, RuntimeConfig,
+        SignificantPatternQuery,
     )
     from repro.obs import JsonlLogger
+    from repro.serve import (
+        MiningService, ServeConfig, WarmupSpec, latency_histogram,
+        percentile,
+    )
 
     log = JsonlLogger() if args.verbose else None
     if args.pipeline not in PIPELINES:
@@ -109,94 +96,145 @@ def main(argv=None):
                  f"available: {sorted(PIPELINES)}")
     alphas = [float(a) for a in args.alphas.split(",") if a]
 
-    session = MinerSession(
+    # the workload: reseeded same-shape cohorts (same bucket -> warm) at
+    # cycling significance levels, built client-side before the clock
+    work = []
+    for q in range(args.queries):
+        ds = Dataset.from_paper_problem(
+            args.problem, args.scale_items, args.scale_trans, seed=q
+        )
+        query = SignificantPatternQuery(
+            alpha=alphas[q % len(alphas)], statistic=args.stat,
+            pipeline=args.pipeline,
+        )
+        work.append((ds, query))
+
+    service = MiningService(
+        size=args.concurrency,
         algorithm=AlgorithmConfig(pipeline=args.pipeline, statistic=args.stat),
         runtime=RuntimeConfig(expand_batch=args.expand_batch,
                               kernel_impl=args.kernel),
+        config=ServeConfig(queue_capacity=args.queue_capacity,
+                           default_timeout_s=args.timeout_s),
+        warmups=[WarmupSpec(work[0][0].bucket, statistic=args.stat,
+                            pipeline=args.pipeline)],
     )
-    print(f"[serve] session over {session.n_devices} miners, "
-          f"pipeline={args.pipeline}, stat={args.stat}, alphas={alphas}")
 
-    # the query queue: reseeded same-shape cohorts (same bucket -> warm) at
-    # cycling significance levels
-    queue = deque(
-        (q, q, alphas[q % len(alphas)]) for q in range(args.queries)
-    )
-    lat, n_phases = [], 0
-    t_serve = time.time()
-    while queue:
-        q, seed, alpha = queue.popleft()
-        ds = Dataset.from_paper_problem(
-            args.problem, args.scale_items, args.scale_trans, seed=seed
-        )
+    async def drive():
         t0 = time.perf_counter()
-        report = session.mine(ds, alpha=alpha)
-        dt = time.perf_counter() - t0
-        lat.append(dt)
-        n_phases = len(report.phases)
-        tag = "cold" if report.cold else "warm"
-        print(f"[q{q:03d}] {tag} {dt * 1e3:9.1f}ms  alpha={alpha:<5} "
-              f"min_sup={report.min_sup} k={report.correction_factor} "
-              f"significant={report.n_significant}")
-        if log:
-            log.event(
-                "query", q=q, cold=report.cold, wall_s=round(dt, 4),
-                alpha=alpha, min_sup=report.min_sup,
-                k=report.correction_factor,
-                significant=report.n_significant,
-                kernel_impl=report.kernel_impl,
-                phase_wall_s=[round(p.wall_s, 4) for p in report.phases],
-            )
-        if args.top_k:
-            for line in report.results.describe(args.top_k).splitlines()[1:]:
-                print("   " + line)
-    total = time.time() - t_serve
+        compiled = await service.start()
+        warmup_s = time.perf_counter() - t0
+        n_dev = service.fleet.workers[0].session.n_devices
+        print(f"[serve] fleet of {service.size} session(s) x {n_dev} miners, "
+              f"pipeline={args.pipeline}, stat={args.stat}, alphas={alphas}; "
+              f"warmup compiled {compiled} programs in {warmup_s:.2f}s")
 
-    warm = lat[1:] if len(lat) > 1 else []
-    cold_s = lat[0]
+        results: list = [None] * len(work)
+        counter = iter(range(len(work)))
+
+        async def client(cid: int):
+            for q in counter:
+                ds, query = work[q]
+                res = await service.mine(ds, query, client=f"cli-{cid}")
+                results[q] = res
+                if res.ok:
+                    rep = res.report
+                    tag = "cold" if rep.cold else "warm"
+                    print(f"[q{q:03d}] {tag} {res.total_s * 1e3:9.1f}ms  "
+                          f"alpha={query.alpha:<5} min_sup={rep.min_sup} "
+                          f"k={rep.correction_factor} "
+                          f"significant={rep.n_significant} "
+                          f"sess={res.session_id} "
+                          f"batch={res.batch_index}/{res.batch_size}")
+                    if log:
+                        log.event(
+                            "query", q=q, cold=rep.cold,
+                            wall_s=round(res.total_s, 4),
+                            queued_s=round(res.queued_s, 4),
+                            service_s=round(res.service_s, 4),
+                            alpha=query.alpha, min_sup=rep.min_sup,
+                            k=rep.correction_factor,
+                            significant=rep.n_significant,
+                            kernel_impl=rep.kernel_impl,
+                            session=res.session_id,
+                            phase_wall_s=[round(p.wall_s, 4)
+                                          for p in rep.phases],
+                        )
+                    if args.top_k:
+                        for line in rep.results.describe(
+                                args.top_k).splitlines()[1:]:
+                            print("   " + line)
+                else:
+                    print(f"[q{q:03d}] {res.outcome} after "
+                          f"{res.total_s * 1e3:9.1f}ms  ({res.reason})")
+                    if log:
+                        log.event("query", q=q, outcome=res.outcome,
+                                  wall_s=round(res.total_s, 4))
+
+        t_serve = time.perf_counter()
+        await asyncio.gather(*[client(c) for c in range(args.concurrency)])
+        total = time.perf_counter() - t_serve
+        await service.stop()
+        return results, total, warmup_s, compiled
+
+    results, total, warmup_s, compiled = asyncio.run(drive())
+
+    ok = [r for r in results if r is not None and r.ok]
+    failed = [r for r in results if r is None or not r.ok]
+    lat = [r.total_s for r in ok]
+    # with startup warmup, *no* served query should ever compile — count
+    # the ones that did instead of asserting (surfaced, not fatal)
+    warm_violations = sum(1 for r in ok if r.report.cold)
     summary = {
         "problem": args.problem,
         "pipeline": args.pipeline,
         "statistic": args.stat,
-        "devices": session.n_devices,
-        "queries": len(lat),
+        "concurrency": args.concurrency,
+        "devices_per_session": (service.fleet.workers[0].session.n_devices),
+        "queries": len(results),
+        "ok": len(ok),
+        "failed": len(failed),
         "total_wall_s": round(total, 3),
-        "cold_s": round(cold_s, 4),
-        "warm_mean_s": round(sum(warm) / len(warm), 4) if warm else None,
-        "warm_p50_s": round(percentile(warm, 50), 4) if warm else None,
-        "warm_p90_s": round(percentile(warm, 90), 4) if warm else None,
-        "warm_max_s": round(max(warm), 4) if warm else None,
-        "cold_over_warm": (round(cold_s * len(warm) / sum(warm), 1)
-                           if warm else None),
-        "qps_warm": round(len(warm) / sum(warm), 2) if warm else None,
+        "achieved_qps": round(len(ok) / total, 2) if total > 0 else None,
+        "warmup_s": round(warmup_s, 3),
+        "warmup_compiles": compiled,
+        "warm_violations": warm_violations,
+        "mean_s": round(sum(lat) / len(lat), 4) if lat else None,
+        "p50_s": round(percentile(lat, 50), 4) if lat else None,
+        "p90_s": round(percentile(lat, 90), 4) if lat else None,
+        "max_s": round(max(lat), 4) if lat else None,
     }
     print("\n[latency] " + json.dumps(summary))
     print(latency_histogram(lat))
-    ci = session.cache_info()
-    print(ci)
-    # every query after the first must have been fully warm: exactly one
-    # compile per phase of the pipeline, ever
-    assert ci.misses == n_phases, \
-        f"expected {n_phases} compiles, saw {ci.misses}"
+    infos = [w.session.cache_info() for w in service.fleet.workers]
+    for w, ci in zip(service.fleet.workers, infos):
+        print(f"session {w.wid}: {ci}")
+    if warm_violations:
+        print(f"[warn] {warm_violations} queries compiled despite warmup "
+              "(warm_violations)", file=sys.stderr)
     if log:
         log.event("serve", **{k: v for k, v in summary.items()},
-                  cache_hits=ci.hits, cache_misses=ci.misses)
+                  cache_hits=sum(ci.hits for ci in infos),
+                  cache_misses=sum(ci.misses for ci in infos))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            f.write(session.metrics.expose_text())
+            f.write(service.metrics.expose_text())
         print(f"[out] wrote metrics snapshot to {args.metrics_out}")
 
     if args.json_out:
         payload = dict(
             summary,
-            per_query_s=[round(x, 4) for x in lat],
-            cache={"hits": ci.hits, "misses": ci.misses,
-                   "programs": ci.n_programs},
+            per_query_s=[round(r.total_s, 4) if r is not None else None
+                         for r in results],
+            cache={"hits": sum(ci.hits for ci in infos),
+                   "misses": sum(ci.misses for ci in infos),
+                   "programs": sum(ci.n_programs for ci in infos)},
         )
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"[out] {args.json_out}")
+    return 0 if not failed else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,225 @@
+"""The session fleet: warm MinerSessions behind the scheduler (DESIGN.md §10).
+
+A fleet is N `MinerSession`s, each pinned to its own single-thread
+executor — the sessions' one-query-at-a-time contract becomes a structural
+property instead of a convention — plus the two policies that make repeat
+traffic cheap:
+
+  * **warmup**: at startup every worker pre-compiles the configured
+    `WarmupSpec`s (shape bucket × statistic × staging) from placeholder
+    datasets, so the first real query of a configured shape dispatches
+    with zero compiles on *any* worker;
+  * **residency + affinity**: each worker remembers the datasets it served
+    (strong refs, LRU over a byte budget, so their packed device buffers
+    stay alive) and `acquire` prefers an idle worker whose program cache
+    is warm for the request's signature — and, among warm workers, one
+    where the dataset's buffers are already resident.
+
+Device partitioning: `build` splits the visible devices into disjoint
+contiguous slices when there are enough to go around (true parallel
+service), and falls back to sharing the full mesh across sessions
+otherwise (time-sliced by the backend; still correct).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+
+from repro.api.dataset import Dataset, ShapeBucket
+
+__all__ = ["FleetWorker", "SessionFleet", "WarmupSpec"]
+
+
+@dataclass(frozen=True)
+class WarmupSpec:
+    """One startup pre-compile target: a shape bucket under a statistic.
+
+    `statistic=None` warms the statistic-free programs (closed-frequent
+    traffic); `pipeline=None` uses the session's configured staging.
+    """
+
+    bucket: ShapeBucket
+    statistic: str | None = "fisher"
+    pipeline: str | None = None
+    alpha: float | None = None
+
+
+class FleetWorker:
+    """One warm session + its confinement thread + its resident datasets."""
+
+    def __init__(self, wid: int, session, *, residency_budget_bytes: int):
+        self.wid = wid
+        self.session = session
+        self.executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"miner-{wid}"
+        )
+        self.busy = False
+        self.served = 0
+        self._budget = residency_budget_bytes
+        # id(dataset) -> (dataset, nbytes); insertion order = LRU order.
+        # Strong refs on purpose: residency means the packed buffers live.
+        self._resident: OrderedDict[int, tuple[Dataset, int]] = OrderedDict()
+        self._resident_bytes = 0
+
+    # ---------------------------------------------------------- residency
+    @staticmethod
+    def _nbytes(dataset: Dataset) -> int:
+        packed = getattr(dataset, "packed", None)
+        bits = getattr(packed, "db_bits", None)
+        return int(bits.nbytes) if bits is not None else 0
+
+    def is_resident(self, dataset: Dataset) -> bool:
+        return id(dataset) in self._resident
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._resident)
+
+    def note_served(self, dataset: Dataset) -> None:
+        """Mark `dataset` most-recently-served; evict LRU over the budget.
+
+        Called from this worker's own thread (run_batch) — each worker's
+        residency map is confined to its thread plus the loop thread's
+        read-only affinity scoring, where a stale read only mis-ranks."""
+        key = id(dataset)
+        if key in self._resident:
+            self._resident.move_to_end(key)
+            return
+        nbytes = self._nbytes(dataset)
+        self._resident[key] = (dataset, nbytes)
+        self._resident_bytes += nbytes
+        # keep at least the newest entry even when it alone busts the budget
+        while self._resident_bytes > self._budget and len(self._resident) > 1:
+            _, (_, dropped) = self._resident.popitem(last=False)
+            self._resident_bytes -= dropped
+
+    # ----------------------------------------------------------- affinity
+    def score(self, signature, dataset: Dataset) -> tuple:
+        """Dispatch preference: warm programs first, resident data second,
+        then fewest-served for balance."""
+        try:
+            warm = 1 if signature.warm_on(self.session) else 0
+        except ValueError:  # signature names a staging this build lacks
+            warm = 0
+        return (warm, 1 if self.is_resident(dataset) else 0, -self.served)
+
+    def shutdown(self) -> None:
+        self.executor.shutdown(wait=True)
+
+
+class SessionFleet:
+    """N warm workers + the acquire/release gate the scheduler drives."""
+
+    def __init__(self, sessions, *, warmups=(),
+                 residency_budget_mb: float = 256.0):
+        if not sessions:
+            raise ValueError("SessionFleet needs at least one session")
+        budget = int(residency_budget_mb * 1e6)
+        self.workers = [
+            FleetWorker(i, s, residency_budget_bytes=budget)
+            for i, s in enumerate(sessions)
+        ]
+        self.warmups = tuple(warmups)
+        self._idle_event = asyncio.Event()
+        self._idle_event.set()
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def build(cls, size: int, *, algorithm=None, runtime=None, metrics=None,
+              devices=None, partition_devices: bool = True, warmups=(),
+              residency_budget_mb: float = 256.0) -> "SessionFleet":
+        """Build `size` sessions over the visible devices.
+
+        With `partition_devices` (default) and >= `size` devices, each
+        session gets a disjoint contiguous slice of the mesh; otherwise
+        every session shares the full device list (backend time-slicing).
+        `metrics` is shared across all sessions (one scrape surface)."""
+        import jax
+
+        from repro.api.session import MinerSession
+
+        if size < 1:
+            raise ValueError(f"fleet size must be >= 1, got {size}")
+        devices = list(jax.devices()) if devices is None else list(devices)
+        if partition_devices and len(devices) >= size:
+            per = len(devices) // size
+            slices = [devices[i * per:(i + 1) * per] for i in range(size)]
+        else:
+            slices = [devices] * size
+        sessions = [
+            MinerSession(devs, algorithm=algorithm, runtime=runtime,
+                         metrics=metrics)
+            for devs in slices
+        ]
+        return cls(sessions, warmups=warmups,
+                   residency_budget_mb=residency_budget_mb)
+
+    @property
+    def size(self) -> int:
+        return len(self.workers)
+
+    # ------------------------------------------------------------- warmup
+    async def start(self) -> int:
+        """Run every warmup spec on every worker (on the workers' own
+        threads, concurrently across workers).  Returns total programs
+        compiled."""
+        if not self.warmups:
+            return 0
+        loop = asyncio.get_running_loop()
+
+        def _warm(worker: FleetWorker) -> int:
+            n = 0
+            for spec in self.warmups:
+                n += worker.session.warmup(
+                    spec.bucket, statistic=spec.statistic,
+                    pipeline=spec.pipeline, alpha=spec.alpha,
+                )
+            return n
+
+        totals = await asyncio.gather(*[
+            loop.run_in_executor(w.executor, _warm, w) for w in self.workers
+        ])
+        return sum(totals)
+
+    # ---------------------------------------------------- acquire/release
+    def acquire_nowait(self, signature, dataset) -> FleetWorker | None:
+        """Claim the best-affinity idle worker, or None if all are busy.
+        Loop-thread only."""
+        idle = [w for w in self.workers if not w.busy]
+        if not idle:
+            return None
+        best = max(idle, key=lambda w: w.score(signature, dataset))
+        best.busy = True
+        best.served += 1
+        return best
+
+    async def acquire(self, signature, dataset) -> FleetWorker:
+        """Wait for an idle worker, then claim by affinity."""
+        while True:
+            worker = self.acquire_nowait(signature, dataset)
+            if worker is not None:
+                return worker
+            self._idle_event.clear()
+            await self._idle_event.wait()
+
+    def release(self, worker: FleetWorker) -> None:
+        worker.busy = False
+        self._idle_event.set()
+
+    @property
+    def n_busy(self) -> int:
+        return sum(1 for w in self.workers if w.busy)
+
+    async def shutdown(self) -> None:
+        """Join every worker thread (after the scheduler drained them)."""
+        loop = asyncio.get_running_loop()
+        await asyncio.gather(*[
+            loop.run_in_executor(None, w.shutdown) for w in self.workers
+        ])

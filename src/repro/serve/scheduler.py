@@ -1,0 +1,308 @@
+"""The serving scheduler: admission, queueing, dispatch (DESIGN.md §10).
+
+One asyncio event loop owns a bounded FIFO request queue in front of the
+session fleet:
+
+  * **admission control** — `submit` raises `AdmissionError("queue_full")`
+    the moment the queue is at capacity (callers see backpressure as a
+    typed rejection, not unbounded latency) and
+    `AdmissionError("shutting_down")` after `stop()`;
+  * **deadlines** — a per-request timeout arms a loop timer; expiry while
+    queued resolves the request as a timeout and removes it (it never
+    touches a device), and `try_start`'s re-check catches deadlines that
+    lapse between timer granularity and dispatch;
+  * **cancellation** — `cancel(request)` terminates a *queued* request;
+    running requests are not interruptible (BSP supersteps);
+  * **dispatch** — the dispatcher awaits an idle worker chosen by warm-
+    program/residency affinity for the queue head, coalesces the head's
+    same-signature run (serve.batch) and drains it on the worker's thread,
+    so the loop keeps admitting while miners mine;
+  * **backpressure signal** — `backpressure` in [0, 1] is queue depth over
+    capacity; it is also exported as a gauge so clients and load
+    generators can shed before admission starts rejecting.
+
+`MiningService` is the facade gluing one fleet + one scheduler + one
+shared `MetricsRegistry` into the thing launchers and benchmarks start.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from collections import deque
+from dataclasses import dataclass
+
+from repro.obs import MetricsRegistry
+from repro.results import ResultStream
+
+from .batch import collect_batch, program_signature, run_batch
+from .fleet import SessionFleet
+from .request import AdmissionError, ServeRequest, ServeResult
+
+__all__ = ["MiningService", "Scheduler", "ServeConfig"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler policy knobs."""
+
+    queue_capacity: int = 64       # admission bound (requests, not batches)
+    max_batch: int = 8             # same-signature coalescing bound
+    default_timeout_s: float | None = None  # per-request deadline default
+
+    def __post_init__(self):
+        if self.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1, got {self.queue_capacity}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.default_timeout_s is not None and self.default_timeout_s <= 0:
+            raise ValueError(
+                f"default_timeout_s must be positive, got "
+                f"{self.default_timeout_s}")
+
+
+class Scheduler:
+    """Admission + bounded queue + affinity dispatch over one fleet."""
+
+    def __init__(self, fleet: SessionFleet, config: ServeConfig | None = None,
+                 *, metrics: MetricsRegistry | None = None):
+        self.fleet = fleet
+        self.config = config or ServeConfig()
+        self.metrics = metrics or MetricsRegistry()
+        m = self.metrics
+        self._m_depth = m.gauge(
+            "serve_queue_depth", "requests waiting for a session")
+        self._m_pressure = m.gauge(
+            "serve_backpressure", "queue depth over capacity, [0, 1]")
+        self._m_requests = m.counter(
+            "serve_requests_total", "served requests by terminal outcome",
+            labels=("outcome",))
+        self._m_rejected = m.counter(
+            "serve_admission_rejections_total",
+            "requests refused at admission", labels=("reason",))
+        self._m_queue_s = m.histogram(
+            "serve_time_in_queue_seconds", "admission -> dispatch wait")
+        self._m_request_s = m.histogram(
+            "serve_request_seconds", "admission -> resolution wall time")
+        self._m_batch = m.histogram(
+            "serve_batch_size", "requests per coalesced dispatch",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0))
+        self._m_cold = m.counter(
+            "serve_cold_queries_total",
+            "served queries that compiled at least one program")
+        self._queue: deque[ServeRequest] = deque()
+        self._running = False
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._dispatcher: asyncio.Task | None = None
+        self._batches: set[asyncio.Task] = set()
+        self._wake = asyncio.Event()
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> int:
+        """Warm the fleet and start dispatching; returns programs compiled."""
+        if self._running:
+            return 0
+        self._loop = asyncio.get_running_loop()
+        self._running = True
+        compiled = await self.fleet.start()
+        self._dispatcher = asyncio.create_task(
+            self._dispatch_loop(), name="serve-dispatch")
+        return compiled
+
+    async def stop(self, *, drain: bool = True) -> None:
+        """Stop admitting; drain (default) or cancel the queue; join workers."""
+        if not self._running:
+            return
+        self._running = False  # submit() rejects from here on
+        if not drain:
+            for req in list(self._queue):
+                self.cancel(req)
+        self._wake.set()
+        if self._dispatcher is not None:
+            await self._dispatcher
+            self._dispatcher = None
+        if self._batches:
+            await asyncio.gather(*self._batches)
+        await self.fleet.shutdown()
+
+    # ------------------------------------------------------------ admission
+    @property
+    def depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def backpressure(self) -> float:
+        return len(self._queue) / self.config.queue_capacity
+
+    def submit(self, dataset, query, *, timeout_s: float | None = None,
+               client: str = "", stream: ResultStream | None = None,
+               ) -> ServeRequest:
+        """Admit one request; returns it (await `request.future`).
+
+        Raises `AdmissionError` instead of queueing when the scheduler is
+        stopped ("shutting_down") or the queue is full ("queue_full").
+        `stream.on_head` is re-dispatched onto this event loop, so client
+        callbacks never run on a miner thread.
+        """
+        if not self._running or self._loop is None:
+            self._m_rejected.labels(reason="shutting_down").inc()
+            raise AdmissionError("shutting_down",
+                                 "scheduler is not accepting requests")
+        if len(self._queue) >= self.config.queue_capacity:
+            self._m_rejected.labels(reason="queue_full").inc()
+            raise AdmissionError(
+                "queue_full",
+                f"queue at capacity ({self.config.queue_capacity}); "
+                "retry with backoff",
+            )
+        if stream is not None:
+            loop, user_cb = self._loop, stream.on_head
+            stream = ResultStream(
+                head_k=stream.head_k, chunk=stream.chunk,
+                on_head=lambda pats: loop.call_soon_threadsafe(user_cb, pats),
+            )
+        if timeout_s is None:
+            timeout_s = self.config.default_timeout_s
+        req = ServeRequest(
+            dataset, query, client=client, stream=stream,
+            signature=program_signature(dataset, query),
+            timeout_s=timeout_s, loop=self._loop,
+        )
+        if req.deadline is not None:
+            req.timer = self._loop.call_later(timeout_s, self._expire, req)
+        self._queue.append(req)
+        self._gauges()
+        self._wake.set()
+        return req
+
+    def cancel(self, req: ServeRequest) -> bool:
+        """Cancel a queued request; False once it started (or finished)."""
+        if not req.try_terminate("cancelled"):
+            return False
+        self._drop(req)
+        result = ServeResult(outcome="cancelled", reason="client cancelled",
+                             queued_s=req.elapsed(), total_s=req.elapsed())
+        self._record(req, result)
+        req.resolve(self._loop, result)
+        return True
+
+    def _expire(self, req: ServeRequest) -> None:
+        if not req.try_terminate("timeout"):
+            return  # started first; the worker owns it now
+        self._drop(req)
+        result = ServeResult(
+            outcome="timeout", reason="deadline expired in queue",
+            queued_s=req.elapsed(), total_s=req.elapsed(),
+        )
+        self._record(req, result)
+        req.resolve(self._loop, result)
+
+    def _drop(self, req: ServeRequest) -> None:
+        try:
+            self._queue.remove(req)
+        except ValueError:
+            pass  # already collected into a batch
+        self._gauges()
+
+    def _gauges(self) -> None:
+        self._m_depth.set(len(self._queue))
+        self._m_pressure.set(self.backpressure)
+
+    def _record(self, req: ServeRequest, result: ServeResult) -> None:
+        """Per-result metrics; thread-safe (runs on miner threads too)."""
+        self._m_requests.labels(outcome=result.outcome).inc()
+        self._m_queue_s.observe(result.queued_s)
+        self._m_request_s.observe(result.total_s)
+        if result.ok and result.report is not None and result.report.cold:
+            self._m_cold.inc()
+
+    # ------------------------------------------------------------- dispatch
+    async def _dispatch_loop(self) -> None:
+        while self._running or self._queue:
+            if not self._queue:
+                self._wake.clear()
+                if not self._running:
+                    break
+                await self._wake.wait()
+                continue
+            head = self._queue[0]
+            worker = await self.fleet.acquire(head.signature, head.dataset)
+            # the queue may have drained (expiry/cancel) while we waited
+            if not self._queue:
+                self.fleet.release(worker)
+                continue
+            # fairness: never batch so greedily that other idle workers
+            # starve — split a deep queue across every available session
+            avail = 1 + sum(1 for w in self.fleet.workers if not w.busy)
+            limit = min(self.config.max_batch,
+                        -(-len(self._queue) // avail))
+            batch = collect_batch(self._queue, limit)
+            self._gauges()
+            if not batch:
+                self.fleet.release(worker)
+                continue
+            self._m_batch.observe(len(batch))
+            task = asyncio.create_task(self._run_batch(worker, batch))
+            self._batches.add(task)
+            task.add_done_callback(self._batches.discard)
+
+    async def _run_batch(self, worker, batch) -> None:
+        try:
+            await self._loop.run_in_executor(
+                worker.executor, run_batch, worker, batch, self._loop,
+                self._record,
+            )
+        finally:
+            self.fleet.release(worker)
+            self._wake.set()
+
+
+class MiningService:
+    """Fleet + scheduler + one metrics surface: the thing you start.
+
+        service = MiningService(size=2, warmups=[WarmupSpec(bucket)])
+        await service.start()
+        result = await service.mine(dataset, SignificantPatternQuery(alpha=0.05))
+        await service.stop()
+    """
+
+    def __init__(self, *, size: int = 2, algorithm=None, runtime=None,
+                 config: ServeConfig | None = None, warmups=(),
+                 metrics: MetricsRegistry | None = None, devices=None,
+                 partition_devices: bool = True,
+                 residency_budget_mb: float = 256.0):
+        self.metrics = metrics or MetricsRegistry()
+        self.fleet = SessionFleet.build(
+            size, algorithm=algorithm, runtime=runtime, metrics=self.metrics,
+            devices=devices, partition_devices=partition_devices,
+            warmups=warmups, residency_budget_mb=residency_budget_mb,
+        )
+        self.scheduler = Scheduler(self.fleet, config, metrics=self.metrics)
+
+    async def start(self) -> int:
+        return await self.scheduler.start()
+
+    async def stop(self, *, drain: bool = True) -> None:
+        await self.scheduler.stop(drain=drain)
+
+    def submit(self, dataset, query, **kw) -> ServeRequest:
+        return self.scheduler.submit(dataset, query, **kw)
+
+    async def mine(self, dataset, query, **kw) -> ServeResult:
+        """Submit and await one request (admission errors still raise)."""
+        return await self.submit(dataset, query, **kw).future
+
+    def cancel(self, req: ServeRequest) -> bool:
+        return self.scheduler.cancel(req)
+
+    @property
+    def depth(self) -> int:
+        return self.scheduler.depth
+
+    @property
+    def backpressure(self) -> float:
+        return self.scheduler.backpressure
+
+    @property
+    def size(self) -> int:
+        return self.fleet.size
