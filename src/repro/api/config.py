@@ -77,6 +77,11 @@ class RuntimeConfig:
     trace_period: int = 0
     trace_cap: int = 0             # trace ring slots; 0 = default when tracing
     sync_period: int = 4           # supersteps between lambda/histogram syncs
+    #: checkpoint cadence (DESIGN.md §11): 0 = classic whole-phase program;
+    #: k > 0 compiles the segmented program (the BSP carry round-trips to
+    #: host every k supersteps) enabling frontier checkpoint/resume and
+    #: cooperative soft deadlines.  Part of the program cache key.
+    ckpt_period: int = 0
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
     # session-level knob (NOT part of any compiled program, so it never
     # reaches the resolved EngineConfig cache key): max compiled programs a
@@ -140,4 +145,5 @@ class RuntimeConfig:
                 else DEFAULT_TRACE_CAP
             ),
             sync_period=self.sync_period,
+            ckpt_period=self.ckpt_period,
         )

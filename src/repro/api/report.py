@@ -45,6 +45,12 @@ class PhaseReport:
     # iff the session ran with trace_period > 0:
     trace: SuperstepTrace | None = field(default=None, repr=False)
     trace_dropped: int = 0     # sampled trace records lost to ring wrap
+    # fault-tolerance provenance (DESIGN.md §11; segmented runs only):
+    partial: bool = False      # stopped cooperatively at a superstep boundary
+    resumed: bool = False      # frontier restored from a checkpoint
+    ckpt_writes: int = 0       # frontier checkpoints written this phase
+    ckpt_bytes: int = 0        # total frontier payload bytes written
+    ckpt_path: str | None = None  # newest published step dir (None = none)
 
     @property
     def stats(self):
@@ -74,6 +80,11 @@ class MineReport:
     wall_s: float              # full query wall time
     statistic: str | None = "fisher"  # repro.stats key; None = untested
     query: str = "significant"        # objective tag (api.query.QUERIES key)
+    #: True when the query stopped at a soft deadline before completing —
+    #: `results` covers only the explored region (results.complete is
+    #: False) and `ckpt_path` names the frontier checkpoint to resume from
+    partial: bool = False
+    ckpt_path: str | None = None
 
     @property
     def cold(self) -> bool:

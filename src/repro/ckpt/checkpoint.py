@@ -1,8 +1,20 @@
-"""Checkpoint/restore with elastic resharding.
+"""Checkpoint/restore with elastic resharding and corruption detection.
 
 Format: <dir>/step_<N>/
-  manifest.json       tree structure, shapes/dtypes, mesh metadata, step
+  manifest.json       tree structure, shapes/dtypes/crc32s, metadata, step
   arrays.npz          one entry per leaf (flattened key path)
+
+Crash safety (DESIGN.md §11): a step is staged into a dot-prefixed tmp dir
+(invisible to `list_steps`) and *published* by a rename sequence that keeps
+a complete copy on disk at every instant — rename the old step aside,
+rename the tmp in, delete the aside.  A crash anywhere leaves either the
+old or the new step fully intact; `.old_step_N`/`.tmp_step_N` leftovers are
+dot-prefixed and never mistaken for steps.
+
+Corruption detection: the manifest records a crc32 per stored leaf;
+`restore`/`load_step` verify on read and raise `CorruptCheckpoint`, and
+`restore_latest` falls back to the newest step that still verifies (with a
+RuntimeWarning naming the ones it skipped).
 
 Restore resharding: arrays are stored unsharded (gathered); on restore they
 are device_put against whatever mesh/sharding the *new* topology defines, so
@@ -12,7 +24,8 @@ tensorstore/OCDBT driver behind the same manifest; the resharding logic —
 the part that matters for elasticity — is identical.
 
 The miner checkpoints its frontier (stacks, histogram, lambda) through the
-same API; `examples/fault_tolerant_mining.py` kills and resumes a search.
+same API (`repro.ckpt.mining`); `examples/fault_tolerant_mining.py` kills
+and resumes a search.
 """
 
 from __future__ import annotations
@@ -21,12 +34,28 @@ import json
 import os
 import re
 import shutil
+import warnings
+import zipfile
+import zlib
 
 import ml_dtypes
 import numpy as np
 
 import jax
-import jax.numpy as jnp
+import jax.numpy as jnp  # noqa: F401  (kept: public module surface)
+
+from repro.testing import faults
+
+__all__ = [
+    "CheckpointError",
+    "CorruptCheckpoint",
+    "latest_step",
+    "list_steps",
+    "load_step",
+    "restore",
+    "restore_latest",
+    "save",
+]
 
 _SEP = "::"
 # dtypes numpy's npz cannot store natively: save as a same-width integer view
@@ -35,6 +64,14 @@ _VIEW_AS = {
     "float8_e4m3fn": np.uint8,
     "float8_e5m2": np.uint8,
 }
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or read."""
+
+
+class CorruptCheckpoint(CheckpointError):
+    """A step dir exists but fails structural or checksum verification."""
 
 
 def _flatten(tree):
@@ -49,30 +86,57 @@ def _flatten(tree):
     return out, treedef
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
 def save(tree, directory: str, step: int, *, meta: dict | None = None, keep: int = 3):
-    """Atomic checkpoint write (tmp dir + rename); prunes old steps."""
+    """Crash-safe checkpoint write; prunes old steps.
+
+    Publish ordering (a complete step dir exists on disk at every instant):
+    stage into `.tmp_step_N`, rename any existing `step_N` aside to
+    `.old_step_N`, rename the tmp in, delete the aside.  The manifest
+    carries a crc32 per stored leaf for corruption detection on restore.
+    """
     tmp = os.path.join(directory, f".tmp_step_{step}")
     final = os.path.join(directory, f"step_{step}")
-    os.makedirs(tmp, exist_ok=True)
+    aside = os.path.join(directory, f".old_step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat, _ = _flatten(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    manifest = {
-        "step": step,
-        "meta": meta or {},
-        "leaves": {
-            k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in arrays.items()
-        },
-    }
     stored = {
         k: (v.view(_VIEW_AS[str(v.dtype)]) if str(v.dtype) in _VIEW_AS else v)
         for k, v in arrays.items()
     }
+    manifest = {
+        "step": step,
+        "meta": meta or {},
+        "leaves": {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                # checksum of the *stored* bytes (post-_VIEW_AS view)
+                "crc32": _crc32(stored[k]),
+            }
+            for k, v in arrays.items()
+        },
+    }
     np.savez(os.path.join(tmp, "arrays.npz"), **stored)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    faults.check("ckpt.pre_publish", step=step, path=tmp)
+    # publish: old aside -> tmp in -> aside gone.  A crash between any two
+    # renames leaves a complete copy (`step_N` or `.old_step_N`) on disk.
+    if os.path.exists(aside):
+        shutil.rmtree(aside)
     if os.path.exists(final):
-        shutil.rmtree(final)
+        os.rename(final, aside)
     os.rename(tmp, final)
+    if os.path.exists(aside):
+        shutil.rmtree(aside)
+    faults.check("ckpt.published", step=step, path=final)
     # prune
     steps = sorted(list_steps(directory))
     for s in steps[:-keep]:
@@ -96,27 +160,62 @@ def latest_step(directory: str):
     return steps[-1] if steps else None
 
 
+def load_step(directory: str, step: int, *, verify: bool = True):
+    """Raw read of one step: (dict key -> ndarray, manifest).
+
+    Arrays come back in their manifest dtypes (`_VIEW_AS` views undone).
+    Raises `CorruptCheckpoint` on structural damage (unreadable manifest or
+    zip) or — with `verify` (default) — on any per-leaf crc32/shape
+    mismatch.  This is the reader `restore`/`restore_latest` and the
+    frontier restore (`repro.ckpt.mining`) build on.
+    """
+    path = os.path.join(directory, f"step_{step}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except (OSError, json.JSONDecodeError, zipfile.BadZipFile, ValueError) as e:
+        raise CorruptCheckpoint(
+            f"step {step} in {directory} is unreadable: {e}") from e
+    out = {}
+    for key, want in manifest.get("leaves", {}).items():
+        try:
+            arr = data[key]
+        except Exception as e:  # zip-level damage raises varied types
+            raise CorruptCheckpoint(
+                f"step {step}: leaf {key!r} unreadable: {e}") from e
+        if verify:
+            crc = want.get("crc32")
+            if crc is not None and _crc32(arr) != crc:
+                raise CorruptCheckpoint(
+                    f"step {step}: leaf {key!r} failed its crc32 check "
+                    "(bytes on disk do not match the manifest)")
+        if want["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, want["dtype"]))
+        if verify and list(arr.shape) != want["shape"]:
+            raise CorruptCheckpoint(
+                f"step {step}: leaf {key!r} shape {list(arr.shape)} != "
+                f"manifest {want['shape']}")
+        out[key] = arr
+    return out, manifest
+
+
 def restore(directory: str, step: int, target_tree, shardings=None):
     """Restore into the structure of target_tree (abstract or concrete).
 
     shardings: optional matching pytree of NamedSharding for elastic
     resharding onto the current mesh; None -> plain host arrays.
+    Raises KeyError when the checkpoint lacks a target leaf, ValueError on
+    a target shape mismatch, and `CorruptCheckpoint` on damaged data.
     """
-    path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    flat_t, treedef = _flatten(target_tree)
+    data, manifest = load_step(directory, step)
+    flat_t, _ = _flatten(target_tree)
     flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
     leaves = []
     for key, target in flat_t.items():
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = data[key]
-        want = manifest["leaves"][key]
-        if want["dtype"] in _VIEW_AS:
-            arr = arr.view(getattr(ml_dtypes, want["dtype"]))
-        assert list(arr.shape) == want["shape"]
         if tuple(arr.shape) != tuple(target.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {target.shape}")
         arr = arr.astype(target.dtype)
@@ -131,8 +230,14 @@ def restore(directory: str, step: int, target_tree, shardings=None):
 
 
 def restore_latest(directory: str, target_tree, shardings=None):
-    step = latest_step(directory)
-    if step is None:
-        return None, None
-    tree, manifest = restore(directory, step, target_tree, shardings)
-    return tree, manifest
+    """Restore the newest step that verifies; corrupt steps are skipped
+    (with a RuntimeWarning) and the next-newest is tried.  Returns
+    (None, None) when no valid step exists."""
+    for step in reversed(list_steps(directory)):
+        try:
+            return restore(directory, step, target_tree, shardings)
+        except CorruptCheckpoint as e:
+            warnings.warn(
+                f"skipping corrupt checkpoint step {step} in {directory}: "
+                f"{e}", RuntimeWarning, stacklevel=2)
+    return None, None

@@ -127,6 +127,25 @@ class EngineConfig:
     trace_period: int = 0
     trace_cap: int = 0             # ring slots; required > 0 when tracing
     sync_period: int = 4           # supersteps between lambda/histogram syncs
+    #: checkpoint cadence (DESIGN.md §11): 0 = the classic whole-phase
+    #: program; k > 0 compiles the *segmented* program — the BSP carry
+    #: round-trips to the host every k supersteps so it can be checkpointed
+    #: (ckpt/mining.py), restored elastically, and stopped cooperatively at
+    #: a superstep boundary.  Part of the program cache key by construction
+    #: (the key holds the resolved EngineConfig), so segmented and classic
+    #: programs never collide.
+    ckpt_period: int = 0
+
+
+#: the BSP carry's leaf names, in carry-tuple order — the frontier schema
+#: shared by the segmented program, the host segment loop, and the
+#: checkpoint mapping (ckpt/mining.py).  Per-miner scalars (sp, head, lam,
+#: t, out_ptr, n_sig, work) ride [P] vectors host-side.
+CARRY_FIELDS = (
+    "occ_stack", "meta", "sp", "head", "hist", "hist_snap", "g_hist_acc",
+    "hist2d", "lam", "t", "stats", "out_occ", "out_meta", "out_ptr",
+    "n_sig", "trace", "work",
+)
 
 
 @dataclass
@@ -146,6 +165,10 @@ class MineOutput:
     emit_dropped: int = 0          # records lost to out_cap saturation
     trace_dropped: int = 0         # sampled trace records lost to ring wrap
     db_bits: np.ndarray | None = None  # [M, W]u32 packed DB (reused downstream)
+    #: False when the pass stopped cooperatively at a superstep boundary
+    #: (soft deadline) before draining the frontier — counts/records cover
+    #: only the explored region (DESIGN.md §11)
+    complete: bool = True
 
 
 def _thresholds_int(
@@ -499,7 +522,39 @@ def build_mine_step(
             out_ptr[None], g_sig, trace[None], g_hist2d,
         )
 
-    return program
+    def seg_program(occ_stack, meta, sp, head, hist, hist_snap, g_hist_acc,
+                    hist2d, lam, t, stats, out_occ, out_meta, out_ptr, n_sig,
+                    trace, work, db_tiles, pos_mask, thr, delta, n_act,
+                    npos_act, t_stop):
+        # the segmented (checkpointable) variant: the full carry is a
+        # program *argument* (host round-trip every segment) and the loop
+        # runs to the runtime bound t_stop instead of draining the frontier.
+        # Per-miner leaves arrive with a leading length-1 shard axis;
+        # per-miner scalars ride [P] vectors (so [1] per device).
+        carry = tuple(
+            x[0] for x in (occ_stack, meta, sp, head, hist, hist_snap,
+                           g_hist_acc, hist2d, lam, t, stats, out_occ,
+                           out_meta, out_ptr, n_sig, trace, work)
+        )
+
+        def cond_fn(carry):
+            t, work = carry[9], carry[16]
+            # work was psum'd at the previous boundary — uniform across
+            # miners, so the loop exits in lockstep; t_stop is runtime data
+            # (no recompile per segment)
+            return (work > 0) & (t < t_stop)
+
+        carry = lax.while_loop(
+            cond_fn,
+            lambda c: body(c, db_tiles, pos_mask, thr, delta, n_act, npos_act),
+            carry,
+        )
+        # no terminal psums here: the host sums the per-miner histograms
+        # once the frontier drains (segments_raw_output) — int32 addition
+        # commutes, so the result is bit-identical to the device psum
+        return tuple(x[None] for x in carry)
+
+    return seg_program if cfg.ckpt_period > 0 else program
 
 
 def build_phase_program(
@@ -525,6 +580,16 @@ def build_phase_program(
         n=n_pad, n_pos=npos_pad, m=m_pad, cfg=cfg, schedule=schedule,
         mode=mode, statistic=statistic,
     )
+    if cfg.ckpt_period > 0:
+        # segmented program: carry in, carry out (every leaf miner-sharded)
+        carry_specs = tuple(P(MINERS_AXIS) for _ in CARRY_FIELDS)
+        return collectives.shard_map(
+            program,
+            mesh=mesh,
+            # db_tiles, pos_mask, thr, delta, n_act, npos_act, t_stop
+            in_specs=carry_specs + (P(),) * 7,
+            out_specs=carry_specs,
+        )
     return collectives.shard_map(
         program,
         mesh=mesh,
@@ -573,6 +638,151 @@ def make_phase_args(
     return args, dict(thr=thr_pad, start_sup=start_sup)
 
 
+def init_carry(
+    packed: PackedProblem,
+    *,
+    n_proc: int,
+    cfg: EngineConfig,
+    mode: str,
+    init_occ: np.ndarray,
+    init_meta: np.ndarray,
+    init_sp: np.ndarray,
+    start_sup: int,
+) -> dict[str, np.ndarray]:
+    """Host-side initial BSP carry for the segmented program.
+
+    A dict keyed by CARRY_FIELDS, every leaf a global [P, ...] numpy array
+    (per-miner scalars as [P] vectors).  Mirrors exactly what the classic
+    program initialises on-device before its while loop, including the
+    boundary-census `work` the loop cond reads.
+    """
+    NB = packed.n_pad + 2
+    SNB = NB if mode == "lamp1" else 1
+    NB2 = (packed.n_pad + 1) * (packed.npos_pad + 1) if mode == "count2d" else 1
+    w = init_occ.shape[-1]
+    i32, P_ = np.int32, n_proc
+    return {
+        "occ_stack": np.ascontiguousarray(init_occ),
+        "meta": np.ascontiguousarray(init_meta),
+        "sp": np.ascontiguousarray(init_sp),
+        "head": np.zeros(P_, i32),
+        "hist": np.zeros((P_, NB), i32),
+        "hist_snap": np.zeros((P_, SNB), i32),
+        "g_hist_acc": np.zeros((P_, SNB), i32),
+        "hist2d": np.zeros((P_, NB2), i32),
+        "lam": np.full(P_, start_sup, i32),
+        "t": np.zeros(P_, i32),
+        "stats": np.zeros((P_, _NSTAT), i32),
+        "out_occ": np.zeros((P_, cfg.out_cap, w), np.uint32),
+        "out_meta": np.zeros((P_, cfg.out_cap, 3), i32),
+        "out_ptr": np.zeros(P_, i32),
+        "n_sig": np.zeros(P_, i32),
+        "trace": np.zeros((P_, max(cfg.trace_cap, 1), N_FIELDS), i32),
+        # miners with non-empty stacks — the same census the classic program
+        # computes on-device before entering its loop
+        "work": np.full(P_, int((np.asarray(init_sp) > 0).sum()), i32),
+    }
+
+
+def make_program_args(
+    packed: PackedProblem,
+    *,
+    n_proc: int,
+    cfg: EngineConfig,
+    mode: str,
+    alpha: float,
+    min_sup: int,
+    delta: float,
+    statistic: str | None = "fisher",
+):
+    """`make_phase_args`, shaped for whichever program variant cfg selects.
+
+    ckpt_period == 0: identical to `make_phase_args`.  ckpt_period > 0: the
+    args tuple matches the segmented program's signature — carry leaves in
+    CARRY_FIELDS order, then the static operands, then a t_stop placeholder
+    — and ctx gains `carry0` (the initial carry dict) and `static` (the
+    operands `run_segments` re-passes every dispatch).
+    """
+    args, ctx = make_phase_args(
+        packed, n_proc=n_proc, cfg=cfg, mode=mode, alpha=alpha,
+        min_sup=min_sup, delta=delta, statistic=statistic,
+    )
+    if cfg.ckpt_period <= 0:
+        return args, ctx
+    carry0 = init_carry(
+        packed, n_proc=n_proc, cfg=cfg, mode=mode,
+        init_occ=args[0], init_meta=args[1], init_sp=args[2],
+        start_sup=ctx["start_sup"],
+    )
+    # db_tiles, pos_mask, thr / delta, n_act, npos_act — lam0 (args[6])
+    # rides the carry instead
+    static = args[3:6] + args[7:10]
+    seg_args = tuple(carry0[k] for k in CARRY_FIELDS) + static + (np.int32(0),)
+    ctx = dict(ctx, carry0=carry0, static=static)
+    return seg_args, ctx
+
+
+def run_segments(
+    dispatch,
+    carry: dict[str, np.ndarray],
+    *,
+    cfg: EngineConfig,
+    static: tuple,
+    should_stop=None,
+    on_segment=None,
+):
+    """Host loop driving the segmented program to frontier exhaustion.
+
+    Each iteration runs one ckpt_period-superstep segment on device, pulls
+    the carry back to host, fires the engine.superstep fault point, then
+    hands the carry to `on_segment` (the checkpoint writer) — in that order,
+    so an injected death loses the running segment's checkpoint, the
+    harshest recovery case.  `should_stop` is polled at the loop bottom
+    only: a cooperative stop always has at least one segment of progress
+    behind it, so a partial result is never empty-by-construction.
+
+    Returns (carry, partial).
+    """
+    from repro.testing import faults
+
+    partial = False
+    while int(carry["work"][0]) > 0 and int(carry["t"][0]) < cfg.max_steps:
+        t_stop = min(int(carry["t"][0]) + cfg.ckpt_period, cfg.max_steps)
+        raw = dispatch(
+            *(carry[k] for k in CARRY_FIELDS), *static, np.int32(t_stop)
+        )
+        carry = {k: np.asarray(v) for k, v in zip(CARRY_FIELDS, raw)}
+        faults.check("engine.superstep", t=int(carry["t"][0]))
+        if on_segment is not None:
+            on_segment(carry)
+        if (
+            should_stop is not None
+            and int(carry["work"][0]) > 0
+            and int(carry["t"][0]) < cfg.max_steps
+            and should_stop()
+        ):
+            partial = True
+            break
+    return carry, partial
+
+
+def segments_raw_output(carry: dict[str, np.ndarray]):
+    """Terminal carry -> the classic program's 10-tuple raw output.
+
+    The host stands in for the classic program's termination psums; int32
+    addition commutes (mod 2^32), so the sums are bit-identical to the
+    device reduction regardless of miner count or summation order.
+    """
+    g_hist = carry["hist"].sum(axis=0, dtype=np.int32)
+    g_hist2d = carry["hist2d"].sum(axis=0, dtype=np.int32)
+    g_sig = carry["n_sig"].sum(dtype=np.int32)
+    return (
+        g_hist, carry["lam"][0], carry["t"][0], carry["stats"],
+        carry["out_occ"], carry["out_meta"], carry["out_ptr"], g_sig,
+        carry["trace"], g_hist2d,
+    )
+
+
 def postprocess_phase(
     raw_out,
     *,
@@ -584,6 +794,7 @@ def postprocess_phase(
     start_sup: int,
     delta: float,
     statistic: str | None = "fisher",
+    partial: bool = False,
 ) -> MineOutput:
     """Device output -> MineOutput: slice padding, fold in the root closed
     set, gather emitted pattern records, surface overflow.  `statistic`
@@ -608,7 +819,9 @@ def postprocess_phase(
     stats_dict = {name: stats[:, i] for i, name in enumerate(STAT_NAMES)}
     if np.any(stats_dict["overflow"]):
         raise RuntimeError("stack overflow in engine: increase stack_cap/push_cap")
-    if int(t) >= cfg.max_steps:
+    # a cooperative (soft-deadline) stop legitimately leaves the frontier
+    # undrained — only an *uninterrupted* pass hitting max_steps is an error
+    if not partial and int(t) >= cfg.max_steps:
         raise RuntimeError("engine hit max_steps before termination")
 
     sig_sup = sig_pos = sig_occ = sig_core = None
@@ -683,6 +896,7 @@ def postprocess_phase(
         emit_dropped=emit_dropped,
         trace_dropped=trace_dropped,
         db_bits=packed.db_bits,
+        complete=not partial,
     )
 
 
@@ -698,6 +912,10 @@ def mine(
     devices=None,
     packed: PackedProblem | None = None,
     statistic: str | None = "fisher",
+    ckpt_dir: str | None = None,
+    resume_from: str | None = None,
+    should_stop=None,
+    ckpt_keep: int = 3,
 ) -> MineOutput:
     """Run one engine pass over all (or the given) local devices.
 
@@ -706,10 +924,21 @@ def mine(
     and postprocesses.  For repeated queries use `repro.api.MinerSession`,
     which caches compiled programs across phases, queries, and same-bucket
     datasets.
+
+    With `cfg.ckpt_period > 0` the pass runs segmented (DESIGN.md §11):
+    `ckpt_dir` checkpoints the frontier every segment, `resume_from`
+    restores the newest valid step (elastically resharded onto this call's
+    device count), and `should_stop()` polled at segment boundaries stops
+    the pass cooperatively (MineOutput.complete=False).
     """
     if mode not in VALID_MODES:
         raise ValueError(
             f"unknown engine mode {mode!r}; valid modes: {', '.join(VALID_MODES)}"
+        )
+    if (ckpt_dir or resume_from or should_stop is not None) and cfg.ckpt_period <= 0:
+        raise ValueError(
+            "ckpt_dir/resume_from/should_stop need the segmented program: "
+            "set EngineConfig.ckpt_period > 0"
         )
     if packed is None:
         packed = pack_problem(db_bool, labels)
@@ -719,7 +948,7 @@ def mine(
     mesh = collectives.make_miner_mesh(devices)
     schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
 
-    args, ctx = make_phase_args(
+    args, ctx = make_program_args(
         packed, n_proc=n_proc, cfg=cfg, mode=mode, alpha=alpha,
         min_sup=min_sup, delta=delta, statistic=statistic,
     )
@@ -727,11 +956,40 @@ def mine(
         (packed.n_pad, packed.npos_pad, packed.m_pad),
         cfg=cfg, schedule=schedule, mesh=mesh, mode=mode, statistic=statistic,
     )
-    raw = jax.jit(shardy)(*args)
+    fn = jax.jit(shardy)
+    partial = False
+    if cfg.ckpt_period > 0:
+        from repro.ckpt import mining as ckpt_mining
+
+        provenance = ckpt_mining.make_provenance(
+            packed, mode=mode, statistic=statistic, alpha=alpha,
+            start_sup=ctx["start_sup"], delta=delta,
+        )
+        carry = ctx["carry0"]
+        if resume_from:
+            restored = ckpt_mining.restore_frontier(
+                resume_from, provenance=provenance, n_proc=n_proc, cfg=cfg,
+                mode=mode,
+            )
+            if restored is not None:
+                carry = restored
+        on_segment = None
+        if ckpt_dir:
+            def on_segment(c):
+                ckpt_mining.save_frontier(
+                    c, ckpt_dir, provenance=provenance, keep=ckpt_keep
+                )
+        carry, partial = run_segments(
+            fn, carry, cfg=cfg, static=ctx["static"],
+            should_stop=should_stop, on_segment=on_segment,
+        )
+        raw = segments_raw_output(carry)
+    else:
+        raw = fn(*args)
     return postprocess_phase(
         raw, packed=packed, n_proc=n_proc, cfg=cfg, mode=mode,
         thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
-        statistic=statistic,
+        statistic=statistic, partial=partial,
     )
 
 

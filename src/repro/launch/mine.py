@@ -92,8 +92,22 @@ def main(argv=None):
                     help="write the host span timeline as Chrome-trace JSON")
     ap.add_argument("--metrics-out", default="",
                     help="write a Prometheus text-format metrics snapshot")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="write frontier checkpoints under this directory "
+                         "(requires --ckpt-period)")
+    ap.add_argument("--ckpt-period", type=int, default=0,
+                    help="supersteps between frontier checkpoints "
+                         "(0 = off; enables the segmented engine)")
+    ap.add_argument("--resume", default="",
+                    help="resume from the newest valid checkpoint under "
+                         "this directory (elastic: the saved frontier is "
+                         "re-dealt onto the current device count)")
     args = ap.parse_args(argv)
 
+    if (args.ckpt_dir or args.resume) and args.ckpt_period < 1:
+        ap.error("--ckpt-dir/--resume need --ckpt-period N (N >= 1): "
+                 "checkpoints are cut at segment boundaries of the "
+                 "segmented engine")
     if args.query == "closed-frequent" and args.min_sup < 1:
         ap.error("--query closed-frequent needs --min-sup N (N >= 1): the "
                  "objective is every closed itemset with support >= N")
@@ -146,6 +160,7 @@ def main(argv=None):
             out_cap=args.out_cap,
             trace_period=args.trace_period,
             trace_cap=args.trace_cap,
+            ckpt_period=args.ckpt_period,
             # stack_cap=None: sized by RuntimeConfig.resolve for the
             # dataset's bucket and the devices actually available
             stack_cap=args.stack_cap or None,
@@ -160,8 +175,14 @@ def main(argv=None):
             alpha=args.alpha, statistic=args.stat, pipeline=args.pipeline
         )
     t0 = time.time()
-    report = session.run(ds, query)
+    report = session.run(ds, query,
+                         ckpt_dir=args.ckpt_dir or None,
+                         resume_from=args.resume or None)
     dt = time.time() - t0
+    if any(p.resumed for p in report.phases):
+        resumed = [p.mode for p in report.phases if p.resumed]
+        print(f"[ckpt] resumed phase(s) {resumed} from {args.resume}",
+              file=sys.stderr)
     if log:
         for p in report.phases:
             log.event(
@@ -198,6 +219,14 @@ def main(argv=None):
         "per_device_popped": work_phase.stats["popped"].tolist(),
         "steals": int(sum(work_phase.stats["steals_got"])),
     }
+    if args.ckpt_period:
+        out["ckpt"] = {
+            "partial": report.partial,
+            "resumed": [p.mode for p in report.phases if p.resumed],
+            "writes": sum(p.ckpt_writes for p in report.phases),
+            "bytes": sum(p.ckpt_bytes for p in report.phases),
+            "path": report.ckpt_path,
+        }
     if report.query == "significant":
         out["planted_recall"] = score_planted(rs, ds.planted)["recall"]
     if args.trace_period:

@@ -137,18 +137,22 @@ def main(argv=None):
                 ds, query = work[q]
                 res = await service.mine(ds, query, client=f"cli-{cid}")
                 results[q] = res
-                if res.ok:
+                if res.ok or res.outcome == "partial":
                     rep = res.report
-                    tag = "cold" if rep.cold else "warm"
+                    tag = ("partial" if res.outcome == "partial"
+                           else "cold" if rep.cold else "warm")
                     print(f"[q{q:03d}] {tag} {res.total_s * 1e3:9.1f}ms  "
                           f"alpha={query.alpha:<5} min_sup={rep.min_sup} "
                           f"k={rep.correction_factor} "
                           f"significant={rep.n_significant} "
                           f"sess={res.session_id} "
-                          f"batch={res.batch_index}/{res.batch_size}")
+                          f"batch={res.batch_index}/{res.batch_size}"
+                          + (f" attempts={res.attempts}"
+                             if res.attempts > 1 else ""))
                     if log:
                         log.event(
                             "query", q=q, cold=rep.cold,
+                            outcome=res.outcome, attempts=res.attempts,
                             wall_s=round(res.total_s, 4),
                             queued_s=round(res.queued_s, 4),
                             service_s=round(res.service_s, 4),
@@ -180,7 +184,12 @@ def main(argv=None):
     results, total, warmup_s, compiled = asyncio.run(drive())
 
     ok = [r for r in results if r is not None and r.ok]
-    failed = [r for r in results if r is None or not r.ok]
+    partial = [r for r in results
+               if r is not None and r.outcome == "partial"]
+    failed = [r for r in results
+              if r is None or r.outcome not in ("ok", "partial")]
+    retried = sum(1 for r in results
+                  if r is not None and getattr(r, "attempts", 1) > 1)
     lat = [r.total_s for r in ok]
     # with startup warmup, *no* served query should ever compile — count
     # the ones that did instead of asserting (surfaced, not fatal)
@@ -193,6 +202,8 @@ def main(argv=None):
         "devices_per_session": (service.fleet.workers[0].session.n_devices),
         "queries": len(results),
         "ok": len(ok),
+        "partial": len(partial),
+        "retried": retried,
         "failed": len(failed),
         "total_wall_s": round(total, 3),
         "achieved_qps": round(len(ok) / total, 2) if total > 0 else None,

@@ -112,11 +112,16 @@ class ResultSet:
     n_dropped: int = 0           # device emissions lost to out_cap saturation
     item_names: tuple[str, ...] | None = None  # column id -> display name
     statistic: str | None = "fisher"  # registered test; None = untested (frequent)
+    #: True when the mine stopped at a soft deadline before draining its
+    #: frontier (DESIGN.md §11): patterns cover only the explored region
+    truncated: bool = False
 
     @property
     def complete(self) -> bool:
-        """False when out_cap overflowed: the pattern list is a subset."""
-        return self.n_dropped == 0
+        """False when the pattern list is a subset: out_cap overflowed
+        (n_dropped) or the mine stopped early at a soft deadline
+        (truncated)."""
+        return self.n_dropped == 0 and not self.truncated
 
     def names_of(self, pattern: Pattern) -> list[str]:
         """Display names of a pattern's items (falls back to the indices)."""
@@ -141,7 +146,9 @@ class ResultSet:
         kind = "significant" if self.statistic is not None else "closed frequent"
         lines = [
             f"top {shown} of {len(self)} {kind} patterns"
-            + ("" if self.complete else f"  [INCOMPLETE: {self.n_dropped} dropped]")
+            + ("" if self.complete else "  [INCOMPLETE: "
+               + ("partial mine" if self.truncated
+                  else f"{self.n_dropped} dropped") + "]")
         ]
         for rank, p in enumerate(self.top(top_k), start=1):
             shown = "[" + ", ".join(self.names_of(p)) + "]"

@@ -103,19 +103,41 @@ class BatchStats:
     n_error: int = 0
     n_cold: int = 0          # ok queries whose report compiled anything
     service_s: float = 0.0   # summed engine+result wall time
+    n_partial: int = 0       # soft-deadline stops (truncated reports)
+    n_retried: int = 0       # failed attempts handed back for requeue
+
+
+def _ckpt_capable(worker) -> bool:
+    """True when the worker's session runs the segmented program — the only
+    program with superstep boundaries to stop at or checkpoint from."""
+    return bool(getattr(getattr(worker.session, "runtime", None),
+                        "ckpt_period", 0))
 
 
 def run_batch(worker, batch: list[ServeRequest], loop,
-              on_result=None) -> BatchStats:
+              on_result=None, on_failure=None,
+              ckpt_dir_for=None) -> BatchStats:
     """Drain one coalesced batch on `worker`'s session (worker thread).
 
     Each request's future resolves (thread-safely, on the loop) as soon as
     its own report is ready.  `on_result(request, result)` — optional —
     fires on this worker thread right before resolution; implementations
     must be thread-safe (the scheduler passes its metrics recorder).
+
+    Fault tolerance (DESIGN.md §11): `on_failure(request, exc, worker)` —
+    optional — decides retry vs terminal error for a failed attempt; when
+    it returns True the request has been handed back to the scheduler
+    (future left pending) and this runner moves on.  On a ckpt-capable
+    session a deadlined request gets an engine-cooperative `should_stop`
+    (stop at a superstep boundary, outcome "partial" with a truncated
+    report) and `ckpt_dir_for(request)` names where its frontier
+    checkpoints go.
     """
+    from repro.testing import faults
+
     stats = BatchStats()
     size = len(batch)
+    capable = _ckpt_capable(worker)
     for i, req in enumerate(batch):
         now = time.perf_counter()
         if not req.try_start():
@@ -129,6 +151,7 @@ def run_batch(worker, batch: list[ServeRequest], loop,
                     queued_s=now - req.submitted,
                     total_s=now - req.submitted,
                     session_id=worker.wid, batch_size=size, batch_index=i,
+                    attempts=req.attempts,
                 )
                 stats.n_timeout += 1
                 if on_result is not None:
@@ -136,31 +159,56 @@ def run_batch(worker, batch: list[ServeRequest], loop,
                 req.resolve(loop, result)
             continue
         try:
+            faults.check("serve.attempt", rid=req.rid, worker=worker.wid)
+            kw = {}
+            if capable:
+                if req.deadline is not None:
+                    kw["should_stop"] = (
+                        lambda d=req.deadline: time.perf_counter() >= d)
+                ckpt_dir = (ckpt_dir_for(req)
+                            if ckpt_dir_for is not None else None)
+                if ckpt_dir:
+                    kw["ckpt_dir"] = ckpt_dir
             report = worker.session.run(req.dataset, req.query,
-                                        stream=req.stream)
-        except Exception as exc:  # engine/query failure -> failed request
-            req.finish("error")
+                                        stream=req.stream, **kw)
+        except Exception as exc:  # engine/query failure -> retry or fail
+            worker.record_failure()
             end = time.perf_counter()
+            started = req.started
+            if on_failure is not None and on_failure(req, exc, worker):
+                # handed back to the scheduler: the future stays pending and
+                # the request is (or will be) queued again
+                stats.n_retried += 1
+                continue
+            req.finish("error")
             result = ServeResult(
                 outcome="error",
                 reason=f"{type(exc).__name__}: {exc}",
-                queued_s=req.started - req.submitted,
-                service_s=end - req.started,
+                queued_s=started - req.submitted,
+                service_s=end - started,
                 total_s=end - req.submitted,
                 session_id=worker.wid, batch_size=size, batch_index=i,
+                attempts=req.attempts,
             )
             stats.n_error += 1
         else:
-            req.finish("ok")
+            worker.record_success()
+            partial = bool(getattr(report, "partial", False))
+            req.finish("partial" if partial else "ok")
             end = time.perf_counter()
             result = ServeResult(
-                outcome="ok", report=report,
+                outcome="partial" if partial else "ok", report=report,
                 queued_s=req.started - req.submitted,
                 service_s=end - req.started,
                 total_s=end - req.submitted,
                 session_id=worker.wid, batch_size=size, batch_index=i,
+                attempts=req.attempts,
+                ckpt_path=getattr(report, "ckpt_path", None),
             )
-            stats.n_ok += 1
+            if partial:
+                stats.n_partial += 1
+            else:
+                stats.n_ok += 1
             stats.n_cold += 1 if report.cold else 0
             stats.service_s += result.service_s
             worker.note_served(req.dataset)

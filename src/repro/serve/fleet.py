@@ -48,16 +48,31 @@ class WarmupSpec:
 
 
 class FleetWorker:
-    """One warm session + its confinement thread + its resident datasets."""
+    """One warm session + its confinement thread + its resident datasets.
 
-    def __init__(self, wid: int, session, *, residency_budget_bytes: int):
+    Circuit breaker (DESIGN.md §11): consecutive failed attempts trip
+    `broken` at `breaker_threshold`, ejecting the worker from `acquire`
+    until the scheduler rebuilds its session (`SessionFleet.rebuild_worker`
+    + `note_repaired`); any success resets the count.
+    """
+
+    def __init__(self, wid: int, session, *, residency_budget_bytes: int,
+                 session_factory=None, breaker_threshold: int = 3):
         self.wid = wid
         self.session = session
+        #: zero-arg callable rebuilding a fresh session for this worker's
+        #: device slice; None = externally-owned sessions (rebuild resets
+        #: the breaker but keeps the session)
+        self.session_factory = session_factory
         self.executor = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=f"miner-{wid}"
         )
         self.busy = False
         self.served = 0
+        self.failures = 0          # consecutive failed attempts
+        self.broken = False        # breaker open: excluded from acquire
+        self.rebuilding = False    # a rebuild task is in flight
+        self.breaker_threshold = breaker_threshold
         self._budget = residency_budget_bytes
         # id(dataset) -> (dataset, nbytes); insertion order = LRU order.
         # Strong refs on purpose: residency means the packed buffers live.
@@ -110,6 +125,18 @@ class FleetWorker:
             warm = 0
         return (warm, 1 if self.is_resident(dataset) else 0, -self.served)
 
+    # ----------------------------------------------------- circuit breaker
+    def record_failure(self) -> None:
+        """One failed attempt (worker thread).  Trips the breaker open at
+        `breaker_threshold` consecutive failures."""
+        self.failures += 1
+        if self.failures >= self.breaker_threshold:
+            self.broken = True
+
+    def record_success(self) -> None:
+        """One successful attempt (worker thread): closes the count."""
+        self.failures = 0
+
     def shutdown(self) -> None:
         self.executor.shutdown(wait=True)
 
@@ -158,8 +185,17 @@ class SessionFleet:
                          metrics=metrics)
             for devs in slices
         ]
-        return cls(sessions, warmups=warmups,
-                   residency_budget_mb=residency_budget_mb)
+        fleet = cls(sessions, warmups=warmups,
+                    residency_budget_mb=residency_budget_mb)
+        # each worker can rebuild a fresh session over its own device slice
+        # (circuit-breaker recovery); default-arg binding pins the slice
+        for worker, devs in zip(fleet.workers, slices):
+            worker.session_factory = (
+                lambda devs=devs: MinerSession(
+                    devs, algorithm=algorithm, runtime=runtime,
+                    metrics=metrics)
+            )
+        return fleet
 
     @property
     def size(self) -> int:
@@ -192,7 +228,7 @@ class SessionFleet:
     def acquire_nowait(self, signature, dataset) -> FleetWorker | None:
         """Claim the best-affinity idle worker, or None if all are busy.
         Loop-thread only."""
-        idle = [w for w in self.workers if not w.busy]
+        idle = [w for w in self.workers if not w.busy and not w.broken]
         if not idle:
             return None
         best = max(idle, key=lambda w: w.score(signature, dataset))
@@ -211,6 +247,30 @@ class SessionFleet:
 
     def release(self, worker: FleetWorker) -> None:
         worker.busy = False
+        self._idle_event.set()
+
+    # ------------------------------------------------------------- repair
+    def rebuild_worker(self, worker: FleetWorker) -> None:
+        """Replace a broken worker's session with a fresh one and re-warm it.
+
+        MUST run on the worker's own executor thread (session confinement);
+        the scheduler dispatches it there and calls `note_repaired` after.
+        Without a `session_factory` (externally-owned sessions) the session
+        is kept and only the failure count resets — a cool-off semantics.
+        """
+        if worker.session_factory is not None:
+            worker.session = worker.session_factory()
+            for spec in self.warmups:
+                worker.session.warmup(
+                    spec.bucket, statistic=spec.statistic,
+                    pipeline=spec.pipeline, alpha=spec.alpha,
+                )
+        worker.failures = 0
+
+    def note_repaired(self, worker: FleetWorker) -> None:
+        """Re-admit a rebuilt worker to `acquire` (loop thread)."""
+        worker.broken = False
+        worker.rebuilding = False
         self._idle_event.set()
 
     @property

@@ -37,10 +37,12 @@ class LoadReport:
     concurrency: int | None         # closed loop: in-flight clients
     n_requests: int = 0             # arrivals (admitted + rejected)
     n_ok: int = 0
+    n_partial: int = 0              # soft-deadline truncated reports
     n_rejected: int = 0             # AdmissionError at submit
     n_timeout: int = 0
     n_cancelled: int = 0
     n_error: int = 0
+    n_retried: int = 0              # resolved requests that took > 1 attempt
     duration_s: float = 0.0         # first arrival -> last resolution
     latencies_s: list = field(default_factory=list)   # ok requests only
     queue_s: list = field(default_factory=list)       # ok time-in-queue
@@ -62,10 +64,12 @@ class LoadReport:
             "concurrency": self.concurrency,
             "n_requests": self.n_requests,
             "n_ok": self.n_ok,
+            "n_partial": self.n_partial,
             "n_rejected": self.n_rejected,
             "n_timeout": self.n_timeout,
             "n_cancelled": self.n_cancelled,
             "n_error": self.n_error,
+            "n_retried": self.n_retried,
             "duration_s": round(self.duration_s, 3),
             "achieved_qps": round(self.achieved_qps, 3),
             "rejection_rate": round(self.rejection_rate, 4),
@@ -80,12 +84,16 @@ class LoadReport:
         return d
 
     def _absorb(self, result) -> None:
+        if getattr(result, "attempts", 1) > 1:
+            self.n_retried += 1
         if result.ok:
             self.n_ok += 1
             self.latencies_s.append(result.total_s)
             self.queue_s.append(result.queued_s)
             if result.report is not None and result.report.cold:
                 self.cold_ok += 1
+        elif result.outcome == "partial":
+            self.n_partial += 1  # a real (truncated) report, not a failure
         elif result.outcome == "timeout":
             self.n_timeout += 1
         elif result.outcome == "cancelled":

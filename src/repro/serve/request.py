@@ -15,6 +15,13 @@ owns the future's resolution (always completed via
 `loop.call_soon_threadsafe`, so consumers only ever see it resolve on the
 loop thread).
 
+Fault tolerance (DESIGN.md §11) adds two non-terminal arcs: a worker
+failure may send running -> queued again (`reset_for_retry`, attempt count
+incremented — the scheduler's retry budget decides), and a soft deadline
+may end a running request with outcome "partial": a real, truncated
+`MineReport` (results.complete == False) plus the frontier checkpoint path
+instead of a bare timeout.
+
 Requests that the scheduler refuses to enqueue never become `ServeRequest`s
 at all — admission control raises `AdmissionError(reason)` at `submit()`.
 """
@@ -35,8 +42,9 @@ __all__ = [
 
 #: terminal outcomes a request can resolve with (ServeResult.outcome) —
 #: "rejected" never appears in a future (admission raises instead) but is
-#: the label admission rejections count under in the metrics surface
-OUTCOMES = ("ok", "timeout", "cancelled", "error", "rejected")
+#: the label admission rejections count under in the metrics surface;
+#: "partial" is a soft-deadline stop carrying a truncated report (§11)
+OUTCOMES = ("ok", "partial", "timeout", "cancelled", "error", "rejected")
 
 _ids = itertools.count()
 
@@ -59,8 +67,8 @@ class ServeResult:
     and service time so tail-latency regressions are attributable.
     """
 
-    outcome: str                  # "ok" | "timeout" | "cancelled" | "error"
-    report: Any = None            # repro.api.MineReport when outcome == "ok"
+    outcome: str                  # "ok" | "partial" | "timeout" | "cancelled" | "error"
+    report: Any = None            # repro.api.MineReport (outcome "ok"/"partial")
     reason: str | None = None     # human-readable failure detail
     queued_s: float = 0.0         # admission -> start (or terminal, if never run)
     service_s: float = 0.0        # engine + result-build wall time
@@ -68,6 +76,8 @@ class ServeResult:
     session_id: int | None = None  # fleet worker that served it
     batch_size: int = 1           # size of the coalesced batch it rode
     batch_index: int = 0          # its position within that batch
+    attempts: int = 1             # serve attempts consumed (retries + 1)
+    ckpt_path: str | None = None  # frontier checkpoint (outcome "partial")
 
     @property
     def ok(self) -> bool:
@@ -79,7 +89,7 @@ class ServeRequest:
 
     __slots__ = (
         "rid", "dataset", "query", "client", "stream", "signature",
-        "deadline", "submitted", "started", "future", "timer",
+        "deadline", "submitted", "started", "future", "timer", "attempts",
         "_state", "_lock",
     )
 
@@ -99,6 +109,7 @@ class ServeRequest:
                          if timeout_s is not None else None)
         self.future = loop.create_future()
         self.timer = None          # loop.call_later handle (scheduler-owned)
+        self.attempts = 1          # serve attempts, counting the current one
         self._state = "queued"
         self._lock = threading.Lock()
 
@@ -127,8 +138,31 @@ class ServeRequest:
             self._state = state
             return True
 
+    def try_terminate_running(self, state: str) -> bool:
+        """running -> error (loop thread; batch-runner death cleanup)."""
+        with self._lock:
+            if self._state != "running":
+                return False
+            self._state = state
+            return True
+
+    def reset_for_retry(self) -> bool:
+        """running -> queued (worker thread, after a failed attempt).
+
+        Bumps the attempt count; the deadline timer stays armed, so a
+        retry that outlives its deadline still expires normally.  False if
+        the request was not running (a terminal transition won).
+        """
+        with self._lock:
+            if self._state != "running":
+                return False
+            self._state = "queued"
+            self.started = None
+            self.attempts += 1
+            return True
+
     def finish(self, state: str) -> None:
-        """running -> ok|error (worker thread, after the engine returns)."""
+        """running -> ok|partial|error (worker thread, post-engine)."""
         with self._lock:
             self._state = state
 

@@ -28,6 +28,8 @@ shared `MetricsRegistry` into the thing launchers and benchmarks start.
 from __future__ import annotations
 
 import asyncio
+import os
+import random
 from collections import deque
 from dataclasses import dataclass
 
@@ -48,6 +50,12 @@ class ServeConfig:
     queue_capacity: int = 64       # admission bound (requests, not batches)
     max_batch: int = 8             # same-signature coalescing bound
     default_timeout_s: float | None = None  # per-request deadline default
+    # ---- fault tolerance (DESIGN.md §11) ----
+    max_retries: int = 2           # extra attempts per request after the 1st
+    retry_backoff_s: float = 0.05  # base requeue delay, doubles per retry
+    retry_jitter: float = 0.25     # uniform backoff inflation, [0, jitter)
+    breaker_threshold: int = 3     # consecutive failures ejecting a worker
+    ckpt_root: str | None = None   # per-request frontier checkpoints go here
 
     def __post_init__(self):
         if self.queue_capacity < 1:
@@ -59,6 +67,16 @@ class ServeConfig:
             raise ValueError(
                 f"default_timeout_s must be positive, got "
                 f"{self.default_timeout_s}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_s < 0 or self.retry_jitter < 0:
+            raise ValueError(
+                "retry_backoff_s and retry_jitter must be >= 0, got "
+                f"{self.retry_backoff_s} / {self.retry_jitter}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold}")
 
 
 class Scheduler:
@@ -90,11 +108,26 @@ class Scheduler:
         self._m_cold = m.counter(
             "serve_cold_queries_total",
             "served queries that compiled at least one program")
+        self._m_retries = m.counter(
+            "serve_retries_total", "failed attempts handed back for requeue",
+            labels=("reason",))
+        self._m_partial = m.counter(
+            "serve_partial_results_total",
+            "requests resolved with a soft-deadline truncated report")
+        self._m_breaker = m.gauge(
+            "serve_worker_breaker_state",
+            "per-worker circuit breaker (0 closed, 1 open)",
+            labels=("worker",))
+        for w in self.fleet.workers:
+            w.breaker_threshold = self.config.breaker_threshold
+            self._m_breaker.labels(worker=str(w.wid)).set(0)
+        self._rng = random.Random(0)  # deterministic backoff jitter
         self._queue: deque[ServeRequest] = deque()
         self._running = False
         self._loop: asyncio.AbstractEventLoop | None = None
         self._dispatcher: asyncio.Task | None = None
         self._batches: set[asyncio.Task] = set()
+        self._retry_timers: dict[int, tuple] = {}  # rid -> (timer, request)
         self._wake = asyncio.Event()
 
     # ------------------------------------------------------------ lifecycle
@@ -121,8 +154,15 @@ class Scheduler:
         if self._dispatcher is not None:
             await self._dispatcher
             self._dispatcher = None
-        if self._batches:
+        while self._batches:  # batches can spawn rebuild tasks; drain all
             await asyncio.gather(*self._batches)
+        # flush requeue callbacks still in flight from worker threads, then
+        # resolve every request parked in retry backoff as a terminal error
+        await asyncio.sleep(0)
+        for timer, req in list(self._retry_timers.values()):
+            timer.cancel()
+            self._fail_retry(req, "scheduler stopped during retry backoff")
+        self._retry_timers.clear()
         await self.fleet.shutdown()
 
     # ------------------------------------------------------------ admission
@@ -213,8 +253,99 @@ class Scheduler:
         self._m_requests.labels(outcome=result.outcome).inc()
         self._m_queue_s.observe(result.queued_s)
         self._m_request_s.observe(result.total_s)
+        if result.outcome == "partial":
+            self._m_partial.inc()
         if result.ok and result.report is not None and result.report.cold:
             self._m_cold.inc()
+
+    # ---------------------------------------------------------- retry (§11)
+    def _ckpt_dir_for(self, req: ServeRequest) -> str | None:
+        """Where one request's frontier checkpoints live (None = no ckpt)."""
+        root = self.config.ckpt_root
+        return os.path.join(root, f"req_{req.rid}") if root else None
+
+    def _on_failure(self, req: ServeRequest, exc, worker) -> bool:
+        """Retry-budget decision for one failed attempt (worker thread).
+
+        True => the request was reset to queued and a backoff requeue is
+        armed on the loop; the caller leaves its future pending.  False =>
+        budget exhausted (or the scheduler is stopping): the caller resolves
+        the request as a terminal error.
+        """
+        if not self._running:
+            return False
+        if req.attempts > self.config.max_retries:
+            return False  # attempt 1 + max_retries retries all consumed
+        if not req.reset_for_retry():
+            return False  # a terminal transition won the race
+        self._m_retries.labels(reason=type(exc).__name__).inc()
+        self._loop.call_soon_threadsafe(self._arm_requeue, req)
+        return True
+
+    def _arm_requeue(self, req: ServeRequest) -> None:
+        """Schedule the delayed requeue of a reset request (loop thread).
+
+        Backoff doubles per retry (attempt 2 waits the base delay) with
+        deterministic uniform jitter so same-worker retries decorrelate.
+        """
+        if not self._running:
+            self._fail_retry(req, "scheduler stopped before retry")
+            return
+        backoff = (self.config.retry_backoff_s * 2 ** (req.attempts - 2)
+                   * (1.0 + self.config.retry_jitter * self._rng.random()))
+        timer = self._loop.call_later(backoff, self._requeue, req)
+        self._retry_timers[req.rid] = (timer, req)
+
+    def _requeue(self, req: ServeRequest) -> None:
+        """Put a backed-off request at the queue tail (loop thread).
+
+        Bypasses admission capacity on purpose: the request was already
+        admitted once and holds a pending client future.  Skips silently if
+        a deadline/cancel resolved it while parked.
+        """
+        self._retry_timers.pop(req.rid, None)
+        if req.state != "queued":
+            return
+        if not self._running:
+            self._fail_retry(req, "scheduler stopped during retry backoff")
+            return
+        self._queue.append(req)
+        self._gauges()
+        self._wake.set()
+
+    def _requeue_now(self, req: ServeRequest) -> None:
+        """Immediate no-penalty requeue for requests whose batch runner died
+        before their attempt started (loop thread): no backoff, no attempt
+        bump — the request itself never failed."""
+        if req.state != "queued":
+            return
+        self._queue.append(req)
+        self._gauges()
+        self._wake.set()
+
+    def _fail_retry(self, req: ServeRequest, why: str) -> None:
+        """Terminal error for a request stuck in retry limbo (loop thread)."""
+        if not req.try_terminate("error"):
+            return
+        result = ServeResult(
+            outcome="error", reason=why, queued_s=req.elapsed(),
+            total_s=req.elapsed(), attempts=req.attempts,
+        )
+        self._record(req, result)
+        req.resolve(self._loop, result)
+
+    async def _rebuild_worker(self, worker) -> None:
+        """Swap a tripped worker's session for a fresh one on its own thread,
+        then close its breaker.  A rebuild that itself raises leaves the
+        breaker open permanently (graceful degradation: the fleet keeps
+        serving on the survivors)."""
+        try:
+            await self._loop.run_in_executor(
+                worker.executor, self.fleet.rebuild_worker, worker)
+        except Exception:
+            return  # breaker stays open, rebuilding stays latched
+        self._m_breaker.labels(worker=str(worker.wid)).set(0)
+        self.fleet.note_repaired(worker)
 
     # ------------------------------------------------------------- dispatch
     async def _dispatch_loop(self) -> None:
@@ -233,7 +364,8 @@ class Scheduler:
                 continue
             # fairness: never batch so greedily that other idle workers
             # starve — split a deep queue across every available session
-            avail = 1 + sum(1 for w in self.fleet.workers if not w.busy)
+            avail = 1 + sum(1 for w in self.fleet.workers
+                            if not w.busy and not w.broken)
             limit = min(self.config.max_batch,
                         -(-len(self._queue) // avail))
             batch = collect_batch(self._queue, limit)
@@ -250,10 +382,40 @@ class Scheduler:
         try:
             await self._loop.run_in_executor(
                 worker.executor, run_batch, worker, batch, self._loop,
-                self._record,
+                self._record, self._on_failure, self._ckpt_dir_for,
             )
+        except Exception as exc:
+            # the batch RUNNER died (not one request's engine call — those
+            # are caught inside run_batch): nothing in this batch may be
+            # lost.  Never-started members requeue free; the in-flight one
+            # burns an attempt through the normal retry budget.
+            worker.record_failure()
+            for req in batch:
+                if req.state == "queued":
+                    self._requeue_now(req)
+                elif req.state == "running":
+                    if self._on_failure(req, exc, worker):
+                        pass  # reset + requeue armed; retry counted inside
+                    elif req.try_terminate_running("error"):
+                        result = ServeResult(
+                            outcome="error",
+                            reason=f"batch runner died: "
+                                   f"{type(exc).__name__}: {exc}",
+                            queued_s=req.elapsed(), total_s=req.elapsed(),
+                            session_id=worker.wid, attempts=req.attempts,
+                        )
+                        self._record(req, result)
+                        req.resolve(self._loop, result)
         finally:
             self.fleet.release(worker)
+            if worker.broken and not worker.rebuilding:
+                worker.rebuilding = True
+                self._m_breaker.labels(worker=str(worker.wid)).set(1)
+                task = asyncio.create_task(
+                    self._rebuild_worker(worker),
+                    name=f"serve-rebuild-{worker.wid}")
+                self._batches.add(task)
+                task.add_done_callback(self._batches.discard)
             self._wake.set()
 
 

@@ -1,0 +1,26 @@
+"""Test-support machinery shipped with the library (not the test suite).
+
+`repro.testing.faults` is the deterministic fault-injection plane used by
+the fault-tolerance tests, the CI kill-and-resume smoke, and
+`examples/fault_tolerant_mining.py` (DESIGN.md §11).
+"""
+
+from .faults import (
+    FaultPlan,
+    SimulatedFault,
+    check,
+    clear,
+    corrupt_step_dir,
+    injected,
+    install,
+)
+
+__all__ = [
+    "FaultPlan",
+    "SimulatedFault",
+    "check",
+    "clear",
+    "corrupt_step_dir",
+    "injected",
+    "install",
+]

@@ -1,0 +1,132 @@
+"""Direct unit tests for repro.ckpt.checkpoint: crash-safe publish, per-leaf
+checksums, corruption detection/fallback, elastic restore (DESIGN.md §11).
+
+The crash-window tests use the deterministic fault points in
+`repro.testing.faults`: a writer killed after staging but before the
+publish renames must leave the previous step fully restorable, and byte
+rot in a published payload must be caught by the per-leaf crc32s and
+skipped by `restore_latest`'s newest-valid fallback.
+"""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+from repro.ckpt import checkpoint as ckpt
+from repro.testing import FaultPlan, SimulatedFault, corrupt_step_dir, injected
+
+
+def tree_eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).dtype == np.asarray(y).dtype
+        and np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------- roundtrip
+def test_roundtrip_view_as_dtypes(tmp_path):
+    """bf16/fp8 leaves ride npz as integer views and come back bit-exact."""
+    tree = {
+        "bf16": jnp.arange(8, dtype=jnp.bfloat16) / 3,
+        "e4m3": jnp.ones(4, jnp.float8_e4m3fn) * 1.5,
+        "e5m2": jnp.full(3, 0.25, jnp.float8_e5m2),
+        "f32": jnp.linspace(0, 1, 5),
+        "i32": jnp.int32(11),
+    }
+    ckpt.save(tree, str(tmp_path), 3, meta={"tag": "v"})
+    restored, manifest = ckpt.restore(str(tmp_path), 3, tree)
+    assert manifest["meta"]["tag"] == "v"
+    assert tree_eq(tree, restored)
+    # the raw reader also undoes the views
+    data, _ = ckpt.load_step(str(tmp_path), 3)
+    assert data["bf16"].dtype == ml_dtypes.bfloat16
+    assert data["e4m3"].dtype == ml_dtypes.float8_e4m3fn
+
+
+def test_prune_keeps_newest_k(tmp_path):
+    tree = {"w": jnp.zeros(2)}
+    for s in range(1, 6):
+        ckpt.save(tree, str(tmp_path), s, keep=3)
+    assert ckpt.list_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_list_steps_ignores_junk(tmp_path):
+    ckpt.save({"w": jnp.zeros(2)}, str(tmp_path), 7)
+    # junk that must be invisible: leftover tmp/aside dirs, a step dir with
+    # no manifest, non-step names
+    os.makedirs(tmp_path / ".tmp_step_9")
+    os.makedirs(tmp_path / ".old_step_7")
+    os.makedirs(tmp_path / "step_8")          # no manifest inside
+    os.makedirs(tmp_path / "step_x")
+    (tmp_path / "notes.txt").write_text("hi")
+    assert ckpt.list_steps(str(tmp_path)) == [7]
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+# -------------------------------------------------------------- error paths
+def test_restore_missing_leaf_and_shape_mismatch(tmp_path):
+    ckpt.save({"a": jnp.zeros(3)}, str(tmp_path), 1)
+    with pytest.raises(KeyError, match="missing leaf"):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(4)})
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Arrays saved unsharded restore against a new mesh's shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    n = len(jax.devices())
+    tree = {"x": jnp.arange(4 * n, dtype=jnp.float32).reshape(n, 4)}
+    ckpt.save(tree, str(tmp_path), 1)
+    mesh = Mesh(np.array(jax.devices()), ("d",))
+    shardings = {"x": NamedSharding(mesh, P("d", None))}
+    restored, _ = ckpt.restore(str(tmp_path), 1, tree, shardings)
+    assert restored["x"].sharding == shardings["x"]
+    assert np.array_equal(np.asarray(restored["x"]), np.asarray(tree["x"]))
+
+
+# ------------------------------------------------------------- crash window
+def test_crash_before_publish_keeps_old_step(tmp_path):
+    """A writer killed between staging and publishing must leave the
+    previous step untouched and restorable (the overwrite-window fix)."""
+    tree1 = {"w": jnp.full(3, 1.0)}
+    tree2 = {"w": jnp.full(3, 2.0)}
+    ckpt.save(tree1, str(tmp_path), 5)
+    # second write OF THE SAME STEP dies after staging, before the renames
+    with injected(FaultPlan(die_in_ckpt_write=0)):
+        with pytest.raises(SimulatedFault):
+            ckpt.save(tree2, str(tmp_path), 5)
+    restored, _ = ckpt.restore(str(tmp_path), 5, tree1)
+    assert tree_eq(tree1, restored)          # old bytes, not the new ones
+    assert ckpt.list_steps(str(tmp_path)) == [5]
+    # a later clean write of the same step succeeds over the leftovers
+    ckpt.save(tree2, str(tmp_path), 5)
+    restored, _ = ckpt.restore(str(tmp_path), 5, tree1)
+    assert tree_eq(tree2, restored)
+
+
+def test_corruption_detected_and_restore_latest_falls_back(tmp_path):
+    tree_a = {"w": jnp.arange(64, dtype=jnp.float32)}
+    tree_b = {"w": jnp.arange(64, dtype=jnp.float32) * 2}
+    ckpt.save(tree_a, str(tmp_path), 1, keep=5)
+    ckpt.save(tree_b, str(tmp_path), 2, keep=5)
+    corrupt_step_dir(str(tmp_path / "step_2"))
+    with pytest.raises(ckpt.CorruptCheckpoint):
+        ckpt.load_step(str(tmp_path), 2)
+    # newest-valid fallback: step 2 skipped (with a warning), step 1 used
+    with pytest.warns(RuntimeWarning, match="skipping corrupt"):
+        restored, manifest = ckpt.restore_latest(str(tmp_path), tree_a)
+    assert manifest["step"] == 1
+    assert tree_eq(tree_a, restored)
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    restored, manifest = ckpt.restore_latest(str(tmp_path), {"w": jnp.zeros(1)})
+    assert restored is None and manifest is None

@@ -1,0 +1,190 @@
+"""Fault-tolerant mining: kill-and-resume bit-identity, elastic resharding,
+provenance refusal, corrupt-step fallback, cooperative partial results
+(DESIGN.md §11).
+
+Everything runs in-process: a "kill" is a `SimulatedFault` raised at an
+engine segment boundary (`repro.testing.faults`), and "fewer devices" is a
+fresh `MinerSession` over a subset of `jax.devices()` — no subprocesses, so
+the bit-identical asserts compare real ResultSets object-for-object.
+"""
+
+import pytest
+import jax
+
+from repro.api import Dataset, MinerSession, RuntimeConfig
+from repro.api.query import ClosedFrequentQuery, SignificantPatternQuery
+from repro.ckpt.mining import ProvenanceMismatch
+from repro.data.synthetic import SyntheticSpec, generate
+from repro.testing import FaultPlan, SimulatedFault, corrupt_step_dir, injected
+
+CKPT_CFG = RuntimeConfig(expand_batch=4, ckpt_period=2)
+Q = SignificantPatternQuery(alpha=0.05)
+
+
+def small_dataset(seed=0, n=60, m=24):
+    spec = SyntheticSpec(name=f"ft{seed}", n_items=m, n_transactions=n,
+                         density=0.15, n_pos=20, n_planted=2, seed=seed)
+    db, labels, _ = generate(spec)
+    return Dataset.from_dense(db, labels, name=f"ft{seed}")
+
+
+def _keys(rs):
+    return [(p.items, p.support, p.pos_support, p.pvalue, p.qvalue)
+            for p in rs]
+
+
+def _expect(ds, devices=None):
+    return MinerSession(devices, runtime=CKPT_CFG).run(ds, Q)
+
+
+def _assert_identical(a, b):
+    assert (a.min_sup, a.correction_factor, a.delta, a.n_significant) == (
+        b.min_sup, b.correction_factor, b.delta, b.n_significant)
+    assert _keys(a.results.patterns) == _keys(b.results.patterns)
+
+
+# ------------------------------------------------------------ kill + resume
+def test_kill_and_resume_bit_identical(tmp_path):
+    ds = small_dataset(seed=1)
+    baseline = _expect(ds)
+    with injected(FaultPlan(die_after_segments=2)):
+        with pytest.raises(SimulatedFault):
+            MinerSession(runtime=CKPT_CFG).run(ds, Q, ckpt_dir=str(tmp_path))
+    resumed = MinerSession(runtime=CKPT_CFG).run(
+        ds, Q, resume_from=str(tmp_path))
+    assert any(p.resumed for p in resumed.phases)
+    assert not resumed.partial and resumed.results.complete
+    _assert_identical(baseline, resumed)
+
+
+def test_completed_run_restores_every_phase(tmp_path):
+    """The terminal carry of each phase is checkpointed too, so resuming a
+    finished mine short-circuits every phase (work == 0 skips the loop) and
+    still reproduces the answer exactly."""
+    ds = small_dataset(seed=2)
+    first = MinerSession(runtime=CKPT_CFG).run(ds, Q, ckpt_dir=str(tmp_path))
+    again = MinerSession(runtime=CKPT_CFG).run(
+        ds, Q, resume_from=str(tmp_path))
+    assert all(p.resumed for p in again.phases)
+    _assert_identical(first, again)
+
+
+def test_ckpt_flags_require_ckpt_period(tmp_path):
+    ds = small_dataset(seed=1)
+    with pytest.raises(ValueError, match="ckpt_period"):
+        MinerSession(runtime=RuntimeConfig(expand_batch=4)).run(
+            ds, Q, ckpt_dir=str(tmp_path))
+
+
+def test_ckpt_writes_counted_in_phase_reports(tmp_path):
+    from repro.obs.validate import validate_prometheus_text
+
+    ds = small_dataset(seed=1)
+    session = MinerSession(runtime=CKPT_CFG)
+    report = session.run(ds, Q, ckpt_dir=str(tmp_path))
+    assert sum(p.ckpt_writes for p in report.phases) > 0
+    assert sum(p.ckpt_bytes for p in report.phases) > 0
+    assert all(p.ckpt_path for p in report.phases)
+    # the checkpoint latency/bytes metrics ride the session registry and
+    # pass the CI Prometheus validator
+    text = session.metrics.expose_text()
+    assert validate_prometheus_text(text) > 0
+    assert "miner_ckpt_write_seconds" in text
+    assert "miner_ckpt_bytes_total" in text
+    again = MinerSession(runtime=CKPT_CFG)
+    again.run(ds, Q, resume_from=str(tmp_path))
+    assert "miner_ckpt_restore_seconds" in again.metrics.expose_text()
+
+
+# --------------------------------------------------------------- provenance
+def test_provenance_mismatch_refused(tmp_path):
+    ds = small_dataset(seed=1)
+    MinerSession(runtime=CKPT_CFG).run(ds, Q, ckpt_dir=str(tmp_path))
+    other = small_dataset(seed=9)  # same shape bucket, different bytes
+    with pytest.raises(ProvenanceMismatch, match="fingerprint"):
+        MinerSession(runtime=CKPT_CFG).run(
+            other, Q, resume_from=str(tmp_path))
+
+
+def test_corrupt_newest_step_falls_back(tmp_path):
+    """Byte rot in the newest frontier step: resume warns, falls back to an
+    older valid step, and the answer is still bit-identical."""
+    import os
+
+    ds = small_dataset(seed=3)
+    baseline = _expect(ds)
+    cfg = RuntimeConfig(expand_batch=1, steal_enabled=False, ckpt_period=1)
+    with injected(FaultPlan(die_after_segments=6)):
+        with pytest.raises(SimulatedFault):
+            MinerSession(runtime=cfg).run(ds, Q, ckpt_dir=str(tmp_path))
+    phase_dir = os.path.join(str(tmp_path), "00_lamp1")
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(phase_dir)
+        if d.startswith("step_"))
+    assert len(steps) >= 2, "need >= 2 saved steps for the fallback test"
+    corrupt_step_dir(os.path.join(phase_dir, f"step_{steps[-1]}"))
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        resumed = MinerSession(runtime=cfg).run(
+            ds, Q, resume_from=str(tmp_path))
+    _assert_identical(baseline, resumed)
+
+
+# --------------------------------------------------------- partial results
+def test_soft_stop_returns_partial_resumable_result(tmp_path):
+    """An immediately-expiring should_stop still completes one segment,
+    returns a truncated-but-real ResultSet plus a checkpoint path, and the
+    checkpoint resumes to the full answer."""
+    ds = small_dataset(seed=4, n=80, m=32)
+    cfg = RuntimeConfig(expand_batch=1, steal_enabled=False, ckpt_period=1)
+    q = ClosedFrequentQuery(min_sup=1)
+    full = MinerSession(runtime=cfg).run(ds, q)
+    # stop after a bounded number of one-superstep segments: enough traversal
+    # for real emissions, far short of the full enumeration.  How many
+    # supersteps pass before the first closure is emitted depends on the
+    # device count (one miner walks the lattice serially, eight walk it in
+    # parallel), so grow the budget until the partial answer is non-empty.
+    part = None
+    for budget in (5, 20, 40, 80):
+        polls = {"n": 0}
+
+        def stop_soon(polls=polls, budget=budget):
+            polls["n"] += 1
+            return polls["n"] > budget
+
+        part = MinerSession(runtime=cfg).run(
+            ds, q, ckpt_dir=str(tmp_path), should_stop=stop_soon)
+        assert part.partial and not part.results.complete
+        assert part.ckpt_path is not None
+        if part.results.patterns:
+            break
+    assert 0 < len(part.results.patterns) < len(full.results.patterns)
+    # closed-frequent p/q-values are NaN (no statistic): key on the
+    # NaN-free fields
+    def keys(rs):
+        return [(p.items, p.support, p.pos_support) for p in rs]
+
+    # every partial pattern is a real pattern of the full answer
+    assert set(keys(part.results.patterns)) <= set(keys(full.results.patterns))
+    # and the checkpoint it left behind resumes to the complete answer
+    done = MinerSession(runtime=cfg).run(ds, q, resume_from=str(tmp_path))
+    assert done.results.complete
+    assert keys(done.results.patterns) == keys(full.results.patterns)
+
+
+# ------------------------------------------------------- elastic resharding
+@pytest.mark.slow
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="elastic reshard tests need 8 devices")
+@pytest.mark.parametrize("new_devices", [4, 1])
+def test_elastic_resume_8_to_fewer(tmp_path, new_devices):
+    ds = small_dataset(seed=5, n=100, m=32)
+    devices = jax.devices()
+    baseline = _expect(ds, devices[:8])
+    with injected(FaultPlan(die_after_segments=2)):
+        with pytest.raises(SimulatedFault):
+            MinerSession(devices[:8], runtime=CKPT_CFG).run(
+                ds, Q, ckpt_dir=str(tmp_path))
+    resumed = MinerSession(devices[:new_devices], runtime=CKPT_CFG).run(
+        ds, Q, resume_from=str(tmp_path))
+    assert any(p.resumed for p in resumed.phases)
+    _assert_identical(baseline, resumed)

@@ -87,7 +87,7 @@ class FakeSession:
         self.n_devices = 1
         self.started = threading.Event()
 
-    def run(self, dataset, query, *, stream=None):
+    def run(self, dataset, query, *, stream=None, **kw):
         self.started.set()
         if self.gate is not None:
             assert self.gate.wait(10.0), "test gate never opened"
@@ -102,11 +102,11 @@ class FakeSession:
         return 0
 
 
-def fake_service(gate=None, *, capacity=4, max_batch=8, size=1):
+def fake_service(gate=None, *, capacity=4, max_batch=8, size=1, **cfg):
     sessions = [FakeSession(gate) for _ in range(size)]
     fleet = SessionFleet(sessions)
     sched = Scheduler(fleet, ServeConfig(queue_capacity=capacity,
-                                         max_batch=max_batch))
+                                         max_batch=max_batch, **cfg))
     return sched, sessions
 
 
@@ -314,3 +314,128 @@ def test_served_concurrency4_parity_with_direct_session():
     # the streamed head of request 0 equals its final head
     assert len(heads) == 1
     assert _keys(heads[0]) == _keys(results[0].report.results.patterns[:3])
+
+
+# ----------------------------------------------- fault tolerance (§11)
+def test_retry_to_success_counts_attempts():
+    """Two injected worker failures, then success: one resolved request,
+    three attempts, retries surfaced in the metrics."""
+    from repro.testing import FaultPlan, injected
+
+    async def main():
+        sched, (fake,) = fake_service(
+            None, max_retries=2, retry_backoff_s=0.005)
+        await sched.start()
+        with injected(FaultPlan(serve_fail_first_n=2)):
+            req = sched.submit(FakeDataset(BUCKET_A, "r0"), Q)
+            result = await req.future
+        await sched.stop()
+        return result, fake
+
+    result, fake = asyncio.run(main())
+    assert result.outcome == "ok"
+    assert result.attempts == 3          # 1 original + 2 retries
+    assert fake.ran == ["r0"]            # the successful attempt ran once
+
+
+def test_retries_exhausted_is_terminal_error():
+    from repro.testing import FaultPlan, injected
+
+    async def main():
+        sched, _ = fake_service(
+            None, max_retries=2, retry_backoff_s=0.005,
+            breaker_threshold=99)        # isolate the retry budget
+        await sched.start()
+        with injected(FaultPlan(serve_fail_first_n=50)):
+            req = sched.submit(FakeDataset(BUCKET_A, "r0"), Q)
+            result = await req.future
+        await sched.stop()
+        return result
+
+    result = asyncio.run(main())
+    assert result.outcome == "error"
+    assert result.attempts == 3          # budget fully consumed
+    assert "SimulatedFault" in result.reason
+
+
+def test_breaker_ejects_then_rebuilds_single_worker():
+    """Three consecutive failures trip the size-1 fleet's only worker; the
+    scheduler rebuilds it (fake sessions: breaker reset) and the retried
+    request completes on the repaired worker."""
+    from repro.testing import FaultPlan, injected
+
+    async def main():
+        sched, (fake,) = fake_service(
+            None, max_retries=3, retry_backoff_s=0.005, breaker_threshold=3)
+        await sched.start()
+        worker = sched.fleet.workers[0]
+        # record every rebuild the scheduler dispatches (the fake rebuild is
+        # instant, so polling `worker.broken` would race the repair)
+        rebuilt = []
+        orig = sched.fleet.rebuild_worker
+        sched.fleet.rebuild_worker = (
+            lambda w: (rebuilt.append(w.wid), orig(w))[1])
+        with injected(FaultPlan(serve_fail_first_n=3)):
+            req = sched.submit(FakeDataset(BUCKET_A, "r0"), Q)
+            result = await req.future
+        await sched.stop()
+        return result, worker, rebuilt
+
+    result, worker, rebuilt = asyncio.run(main())
+    assert rebuilt == [0], "3 consecutive failures must trip + rebuild"
+    assert result.outcome == "ok" and result.attempts == 4
+    assert not worker.broken and worker.failures == 0  # repaired + closed
+
+
+def test_worker_death_loses_zero_requests():
+    """A burst of injected deaths across a 2-worker fleet: every admitted
+    request still resolves ok (retries + breaker rebuilds, never drops)."""
+    from repro.testing import FaultPlan, injected
+
+    async def main():
+        sched, fakes = fake_service(
+            None, capacity=32, max_batch=2, size=2,
+            max_retries=4, retry_backoff_s=0.005, breaker_threshold=3)
+        await sched.start()
+        with injected(FaultPlan(serve_fail_first_n=6)):
+            reqs = [sched.submit(FakeDataset(BUCKET_A, f"r{i}"), Q)
+                    for i in range(12)]
+            results = await asyncio.gather(*[r.future for r in reqs])
+        await sched.stop()
+        return results, fakes
+
+    results, fakes = asyncio.run(main())
+    assert [r.outcome for r in results] == ["ok"] * 12
+    assert sum(r.attempts for r in results) == 12 + 6  # every death retried
+    ran = sorted(n for f in fakes for n in f.ran)
+    assert ran == sorted(f"r{i}" for i in range(12))  # each ran exactly once
+
+
+def test_deadline_partial_result_real_engine(tmp_path):
+    """A request whose deadline expires mid-mine stops at a superstep
+    boundary and resolves "partial": a truncated-but-real ResultSet plus
+    the frontier checkpoint path, not a bare timeout."""
+    from repro.api.query import ClosedFrequentQuery
+
+    ds = small_dataset(seed=7, n=100, m=40)
+    cfg = RuntimeConfig(expand_batch=1, steal_enabled=False, ckpt_period=4)
+    query = ClosedFrequentQuery(min_sup=1)
+
+    async def main():
+        svc = MiningService(
+            size=1, runtime=cfg,
+            config=ServeConfig(ckpt_root=str(tmp_path)),
+            warmups=[WarmupSpec(ds.bucket, statistic=None)],
+        )
+        await svc.start()
+        res = await svc.mine(ds, query, timeout_s=0.3)
+        await svc.stop()
+        return res, svc.metrics.expose_text()
+
+    res, metrics = asyncio.run(main())
+    assert res.outcome == "partial"
+    rep = res.report
+    assert rep.partial and not rep.results.complete
+    assert len(rep.results.patterns) > 0      # real work, not a bare timeout
+    assert res.ckpt_path and res.ckpt_path.startswith(str(tmp_path))
+    assert "serve_partial_results_total 1" in metrics
