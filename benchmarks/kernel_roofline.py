@@ -1,4 +1,4 @@
-"""Kernel-level roofline for the two Pallas kernels (paper §4.6 hot spot).
+"""Kernel-level roofline for the support-count Pallas kernel (paper §4.6).
 
 CPU wall-clock says nothing about TPU kernels, so this benchmark reports the
 *structural* roofline per tile configuration:
@@ -7,10 +7,6 @@ CPU wall-clock says nothing about TPU kernels, so this benchmark reports the
       ops   = B*M*W words -> 1 AND + 1 popcount + 1 add  per word-lane
       bytes = (B*W + W*M)*4 read + B*M*4 written   per tile sweep
       v5e VPU: 8 lanes x 128 sublanes x 4 ops/cycle @ 940 MHz ~ 4.8e12 int-op/s
-
-  flash attention (MXU workload):
-      flops = 4*B*H*Sq*Skv*D (QK^T + PV)
-      bytes = streaming KV once per q-block row + resident q/acc
 
 plus interpret-mode numerical verification against the numpy oracle at every
 reported configuration (correctness and the perf claim travel together).
@@ -35,7 +31,6 @@ from repro.kernels.support_count.ops import support_counts
 from .common import save_json
 
 VPU_INT_OPS = autotune.VPU_INT_OPS  # v5e 8x128 lanes, ~940 MHz, 4 ALUs
-PEAK_FLOPS = 197e12
 HBM_BW = autotune.HBM_BW
 VMEM_BYTES = 16 * 2**20
 
@@ -102,30 +97,6 @@ def autotune_sweep(shapes=None, max_candidates: int = 4, iters: int = 2):
     return rows
 
 
-def flash_attention_report():
-    rows = []
-    for b, h, sq, skv, d, bq, bk in [
-        (32, 40, 32768, 32768, 128, 128, 128),   # prefill_32k qwen3-like
-        (2, 96, 32768, 32768, 128, 128, 256),    # prefill cmd-r+-like (per dev)
-        (8, 16, 4096, 4096, 256, 128, 128),      # train_4k rg-like
-    ]:
-        flops = 4.0 * b * h * sq * skv * d / 2  # causal halves the work
-        bytes_hbm = (b * h * (sq * d * 2 * 2)            # q read + out write
-                     + b * h * (sq // bq) * skv * d * 2 * 2 / 2) / 1  # kv stream
-        t_c = flops / PEAK_FLOPS
-        t_m = bytes_hbm / HBM_BW
-        vmem = (bq * d + 2 * bk * d) * 2 + bq * (d + 2) * 4
-        rows.append({
-            "shape": f"B{b} H{h} Sq{sq} Skv{skv} D{d}", "block": f"{bq}x{bk}",
-            "tflops": flops / 1e12, "t_compute_s": t_c, "t_memory_s": t_m,
-            "bound": "compute" if t_c > t_m else "memory",
-            "vmem_per_step_kib": vmem / 1024,
-            "note": "KV re-streamed once per q-row block; raising bq trades "
-                    "VMEM for HBM traffic",
-        })
-    return rows
-
-
 def run():
     import os
 
@@ -134,7 +105,6 @@ def run():
     sweep = autotune_sweep()
     out = {
         "support_count": support_count_report(),
-        "flash_attention": flash_attention_report(),
         "autotune_sweep": sweep,
     }
     save_json("kernel_roofline.json", out)  # also creates BENCH_DIR

@@ -6,8 +6,8 @@ import os
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 
-"""Benchmark runner: one artifact per paper table/figure + kernel rooflines
-+ the LM dry-run roofline summary.
+"""Benchmark runner: one artifact per paper table/figure + kernel roofline
++ the large-P topology-scaling curve.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig6_speedup
@@ -67,36 +67,26 @@ def _run_kernels(kernel_roofline):
         ["shape", "block", "t_compute_us", "t_memory_us", "bound",
          "vmem_per_step_kib", "fits_vmem", "verified_vs_oracle"],
     )
+
+
+def _run_scaling():
+    from . import bench_scaling
+
+    out = bench_scaling.run(bench_scaling.SMOKE_DATASET,
+                            bench_scaling.SMOKE_MIN_SUP,
+                            bench_scaling.SMOKE_P_VALUES, None)
     _print_table(
-        "Pallas flash-attention roofline (v5e)", out["flash_attention"],
-        ["shape", "block", "tflops", "t_compute_s", "t_memory_s", "bound",
-         "vmem_per_step_kib"],
-    )
-
-
-def _run_lm_roofline():
-    from .roofline import analyze, load_all
-
-    recs = load_all()
-    if not recs:
-        print("\n(no dry-run artifacts; run repro.launch.dryrun first)")
-        return
-    rows = [analyze(r) for r in recs]
-    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
-    _print_table(
-        "LM dry-run roofline (see EXPERIMENTS.md §Roofline)",
+        "Topology scaling (smoke; full curve: -m benchmarks.bench_scaling)",
         [
             {
-                "cell": f"{r['arch']}/{r['shape']}/{r['mesh']}",
-                "compute_s": r["t_compute_s"], "memory_s": r["t_memory_s"],
-                "coll_s": r["t_collective_s"], "bound": r["bottleneck"],
-                "roofl%": 100 * r["roofline_fraction"],
-                "GiB": r["mem_gib_per_dev"], "fits": r["fits_16g"],
+                "P": pt["P"], "topology": pt["topology"],
+                "hier_x": pt["speedup"]["hierarchical"],
+                "flat_x": pt["speedup"]["flat"],
+                "static_x": pt["speedup"]["naive_static"],
             }
-            for r in rows
+            for pt in out["curve"]
         ],
-        ["cell", "compute_s", "memory_s", "coll_s", "bound", "roofl%", "GiB",
-         "fits"],
+        ["P", "topology", "hier_x", "flat_x", "static_x"],
     )
 
 
@@ -130,7 +120,7 @@ def main():
              "wall_s", "engine_matches_host"],
         ),
         "kernels": lambda: _run_kernels(kernel_roofline),
-        "lm_roofline": _run_lm_roofline,
+        "scaling": _run_scaling,
     }
     for name, fn in sections.items():
         if args.only and args.only != name:

@@ -35,6 +35,7 @@ from repro.core.engine import EngineConfig
 from repro.core.expand import resolve_kernel_impl
 from repro.kernels.support_count import autotune
 from repro.obs.trace import DEFAULT_TRACE_CAP
+from repro.topo.topology import Topology
 
 from .dataset import ShapeBucket
 
@@ -82,6 +83,12 @@ class RuntimeConfig:
     #: host every k supersteps) enabling frontier checkpoint/resume and
     #: cooperative soft deadlines.  Part of the program cache key.
     ckpt_period: int = 0
+    #: machine shape (repro.topo): None = flat 1-D miners mesh; a Topology
+    #: switches the session onto the 2-D [hosts, local] mesh with the
+    #: hierarchical two-level lifeline schedule.  Hashable, so topology
+    #: lands in the resolved EngineConfig and hence the program cache key —
+    #: flat and hierarchical programs never collide.
+    topology: Topology | None = None
     stack_mem_mb: int = 256        # per-miner stack memory ceiling (resolve())
     # session-level knob (NOT part of any compiled program, so it never
     # reaches the resolved EngineConfig cache key): max compiled programs a
@@ -146,4 +153,5 @@ class RuntimeConfig:
             ),
             sync_period=self.sync_period,
             ckpt_period=self.ckpt_period,
+            topology=self.topology,
         )

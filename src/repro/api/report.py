@@ -45,6 +45,12 @@ class PhaseReport:
     # iff the session ran with trace_period > 0:
     trace: SuperstepTrace | None = field(default=None, repr=False)
     trace_dropped: int = 0     # sampled trace records lost to ring wrap
+    # per-schedule-round steal attribution (DESIGN.md §12; traced sessions
+    # only): round name -> {tier, steps, fired, donated, received}, and
+    # Jain's donation fairness split by steal tier ("local"/"cross" on the
+    # hierarchical schedule, "flat" on the one-level schedule)
+    steal_by_round: dict | None = field(default=None, repr=False)
+    tier_fairness: dict | None = None
     # fault-tolerance provenance (DESIGN.md §11; segmented runs only):
     partial: bool = False      # stopped cooperatively at a superstep boundary
     resumed: bool = False      # frontier restored from a checkpoint

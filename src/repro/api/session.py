@@ -64,6 +64,9 @@ from repro.core.engine import (
     build_phase_program,
     make_phase_args,  # noqa: F401  (re-exported for compatibility)
     make_program_args,
+    mesh_axis,
+    phase_in_specs,
+    phase_out_specs,
     postprocess_phase,
     run_segments,
     segments_raw_output,
@@ -156,9 +159,17 @@ class MinerSession:
     ):
         self.devices = jax.devices() if devices is None else list(devices)
         self.n_devices = len(self.devices)
-        self.mesh = collectives.make_miner_mesh(self.devices)
         self.algorithm = algorithm or AlgorithmConfig()
         self.runtime = runtime or RuntimeConfig()
+        # the machine shape decides the mesh: flat 1-D "miners" (the
+        # classic path) or the 2-D [hosts, local] topo mesh with the
+        # hierarchical steal schedule (repro.topo, DESIGN.md §12)
+        if self.runtime.topology is not None:
+            self.mesh = collectives.make_topo_mesh(
+                self.runtime.topology, self.devices
+            )
+        else:
+            self.mesh = collectives.make_miner_mesh(self.devices)
         # observability (DESIGN.md §9): every session gets a host span
         # timeline and a metrics registry; callers share one across sessions
         # (or export them) by passing their own
@@ -224,9 +235,18 @@ class MinerSession:
 
     # -------------------------------------------------------------- programs
     def _schedule(self, cfg: EngineConfig):
-        key = (cfg.n_random_perms, cfg.seed)
+        key = (cfg.n_random_perms, cfg.seed, cfg.topology)
         if key not in self._schedules:
-            self._schedules[key] = build_schedule(self.n_devices, *key)
+            if cfg.topology is not None:
+                from repro.topo.hierarchy import build_hierarchical_schedule
+
+                self._schedules[key] = build_hierarchical_schedule(
+                    cfg.topology, cfg.n_random_perms, cfg.seed
+                )
+            else:
+                self._schedules[key] = build_schedule(
+                    self.n_devices, cfg.n_random_perms, cfg.seed
+                )
         return self._schedules[key]
 
     def _program(self, mode: str, bucket: ShapeBucket, cfg: EngineConfig,
@@ -370,6 +390,13 @@ class MinerSession:
                     ds.packed, n_proc=self.n_devices, cfg=cfg, mode=mode,
                     alpha=alpha, min_sup=1, delta=0.0, statistic=statistic,
                 )
+                if jax.process_count() > 1:
+                    from repro.topo import bootstrap
+
+                    args = bootstrap.globalize_args(
+                        args, self.mesh,
+                        phase_in_specs(cfg, mesh_axis(self.mesh)),
+                    )
                 stat_key = statistic if mode in ("test", "count2d") else None
                 _, hit = self._program(mode, ds.bucket, cfg, stat_key, args)
                 compiled += 0 if hit else 1
@@ -418,6 +445,24 @@ class MinerSession:
                     alpha=alpha, min_sup=min_sup, delta=delta,
                     statistic=statistic,
                 )
+            multiproc = jax.process_count() > 1
+            if multiproc:
+                # global-array marshalling (repro.topo.bootstrap): the mesh
+                # spans other processes' devices, so host numpy arguments
+                # must become global jax.Arrays *before* lowering (the AOT
+                # program bakes in their shardings)
+                from repro.topo import bootstrap
+
+                if cfg.ckpt_period > 0:
+                    raise NotImplementedError(
+                        "segmented (ckpt_period > 0) passes are not yet "
+                        "supported under a multi-process mesh: the per-"
+                        "segment host round-trip of the carry needs "
+                        "allgather plumbing"
+                    )
+                args = bootstrap.globalize_args(
+                    args, self.mesh, phase_in_specs(cfg, mesh_axis(self.mesh))
+                )
             # the statistic is traced only into the emission gate; lamp1/count
             # programs are statistic-free and shared under the None key
             stat_key = statistic if mode in ("test", "count2d") else None
@@ -432,11 +477,18 @@ class MinerSession:
             else:
                 with self.tracer.span("dispatch", cache_hit=hit):
                     raw = entry.compiled(*args)
+                if multiproc:
+                    # every process gathers the same full numpy outputs, so
+                    # postprocess (and the ResultSet) is identical everywhere
+                    raw = bootstrap.fetch_outputs(
+                        raw, phase_out_specs(cfg, mesh_axis(self.mesh))
+                    )
             with self.tracer.span("postprocess"):
                 out = postprocess_phase(
                     raw, packed=dataset.packed, n_proc=self.n_devices, cfg=cfg,
                     mode=mode, thr=ctx["thr"], start_sup=ctx["start_sup"],
                     delta=delta, statistic=statistic, partial=partial,
+                    schedule=self._schedule(cfg),
                 )
         entry.calls += 1
         wall_s = time.perf_counter() - t0
@@ -465,6 +517,10 @@ class MinerSession:
             n_item_tiles=dataset.bucket.n_tiles,
             trace=out.trace,
             trace_dropped=out.trace_dropped,
+            steal_by_round=(out.trace.steal_by_round()
+                            if out.trace is not None else None),
+            tier_fairness=(out.trace.tier_fairness()
+                           if out.trace is not None else None),
             partial=partial,
             resumed=resumed,
             ckpt_writes=ckpt["writes"],

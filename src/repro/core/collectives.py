@@ -38,11 +38,16 @@ from jax.sharding import Mesh, PartitionSpec
 
 __all__ = [
     "MINERS_AXIS",
+    "HOSTS_AXIS",
+    "LOCAL_AXIS",
+    "TOPO_AXES",
     "resolve_shard_map",
     "shard_map",
     "psum",
     "ppermute",
+    "axis_index",
     "make_miner_mesh",
+    "make_topo_mesh",
     "force_host_device_count",
     "host_device_count_env",
     "device_count",
@@ -51,6 +56,12 @@ __all__ = [
 
 # The engine's canonical 1-D mesh axis: one logical miner per device.
 MINERS_AXIS = "miners"
+
+# The 2-D topology mesh axes (repro.topo): miners laid out
+# [n_hosts, devices_per_host]; global rank = hosts-index * dph + local-index.
+HOSTS_AXIS = "hosts"
+LOCAL_AXIS = "local"
+TOPO_AXES = (HOSTS_AXIS, LOCAL_AXIS)
 
 _CHECK_KWARGS = ("check_vma", "check_rep")  # newest first
 
@@ -133,8 +144,19 @@ def shard_map(
 # module: a non-XLA backend (or a tracing/shim layer) only has to replace
 # these two functions and `shard_map` above.
 
-def psum(x, axis_name: str = MINERS_AXIS):
-    """Sum `x` across the mesh axis (every miner gets the total)."""
+def psum(x, axis_name=MINERS_AXIS):
+    """Sum `x` across the mesh axis (every miner gets the total).
+
+    A *tuple* of axis names runs the staged hierarchical reduction: the
+    last-named (innermost, intra-host) axis first, then outward — on the
+    topo mesh that is one cheap on-host stage followed by one cross-host
+    stage over already-reduced values.  Integer sums commute, so the result
+    is bit-identical to a flat single-axis psum over the same miners.
+    """
+    if isinstance(axis_name, tuple):
+        for name in reversed(axis_name):
+            x = lax.psum(x, name)
+        return x
     return lax.psum(x, axis_name)
 
 
@@ -143,8 +165,18 @@ def ppermute(x, perm: Sequence[tuple[int, int]], axis_name: str = MINERS_AXIS):
     return lax.ppermute(x, axis_name, perm=list(perm))
 
 
-def axis_index(axis_name: str = MINERS_AXIS):
-    """This miner's position on the mesh axis (0..P-1), as a traced scalar."""
+def axis_index(axis_name=MINERS_AXIS):
+    """This miner's position on the mesh axis (0..P-1), as a traced scalar.
+
+    A *tuple* of axis names yields the flattened row-major rank — on the
+    topo mesh `(HOSTS_AXIS, LOCAL_AXIS)` that is the global miner rank
+    `host * devices_per_host + local`, matching `Topology.rank_of`.
+    """
+    if isinstance(axis_name, tuple):
+        idx = lax.axis_index(axis_name[0])
+        for name in axis_name[1:]:
+            idx = idx * lax.psum(1, name) + lax.axis_index(name)
+        return idx
     return lax.axis_index(axis_name)
 
 
@@ -154,6 +186,28 @@ def make_miner_mesh(devices=None, axis_name: str = MINERS_AXIS) -> Mesh:
     if devices is None:
         devices = jax.devices()
     return Mesh(np.asarray(devices), (axis_name,))
+
+
+def make_topo_mesh(topology, devices=None) -> Mesh:
+    """[n_hosts, devices_per_host] mesh with axes ("hosts", "local").
+
+    `devices` defaults to every global device; jax orders them by process
+    (each process owns a contiguous block), so the row-major reshape puts
+    host h's devices in mesh row h and global rank = h * dph + l — exactly
+    `Topology.rank_of`.  A single process can *simulate* a multi-host shape
+    by reshaping its local devices the same way (the cross-host axis then
+    permutes on-host, semantically identical, latency aside).
+    """
+    if devices is None:
+        devices = jax.devices()
+    devices = np.asarray(devices)
+    if devices.size != topology.n_proc:
+        raise ValueError(
+            f"topology {topology} needs {topology.n_proc} devices, "
+            f"got {devices.size}"
+        )
+    grid = devices.reshape(topology.n_hosts, topology.devices_per_host)
+    return Mesh(grid, TOPO_AXES)
 
 
 def device_count() -> int:

@@ -79,6 +79,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.obs.trace import N_FIELDS, SuperstepTrace, decode_trace
 from repro.stats import get_statistic
+from repro.topo.topology import Topology
 
 from . import collectives
 from .bitmap import (
@@ -135,6 +136,15 @@ class EngineConfig:
     #: (the key holds the resolved EngineConfig), so segmented and classic
     #: programs never collide.
     ckpt_period: int = 0
+    #: machine shape (repro.topo): None = the classic flat 1-D "miners"
+    #: mesh; a Topology switches the pass onto the 2-D [hosts, local] mesh
+    #: with the hierarchical two-level lifeline schedule (intra-host rounds
+    #: cheap and frequent, cross-host rounds rare).  Frozen and hashable,
+    #: so flat and hierarchical programs never collide in a program cache.
+    #: A single process can force a simulated shape (e.g. 2x4 on 8 local
+    #: devices); under jax.distributed the shape must match the real
+    #: process layout.
+    topology: Topology | None = None
 
 
 #: the BSP carry's leaf names, in carry-tuple order — the frontier schema
@@ -369,7 +379,7 @@ def deal_roots(packed: PackedProblem, n_proc: int, cfg: EngineConfig, min_sup: i
 
 def build_mine_step(
     *, n: int, n_pos: int, m: int, cfg: EngineConfig,
-    schedule: LifelineSchedule, mode: str, axis: str = MINERS_AXIS,
+    schedule: LifelineSchedule, mode: str, axis=MINERS_AXIS,
     statistic: str | None = "fisher",
 ):
     """Wire the superstep phases into the per-device BSP program body.
@@ -557,6 +567,63 @@ def build_mine_step(
     return seg_program if cfg.ckpt_period > 0 else program
 
 
+def mesh_axis(mesh) -> "str | tuple":
+    """The collective-axis argument for this mesh: one name, or the topo
+    tuple ("hosts", "local") — what hunger_census/steal/psum thread through."""
+    names = tuple(mesh.axis_names)
+    return names if len(names) > 1 else names[0]
+
+
+def make_mesh_and_schedule(cfg: EngineConfig, devices):
+    """The (mesh, lifeline schedule) pair cfg.topology selects.
+
+    Flat (topology=None): the classic 1-D miners mesh + one-level schedule.
+    With a Topology: the 2-D [hosts, local] mesh + the hierarchical
+    two-level schedule (repro.topo) — the device list must match the
+    topology's P exactly.
+    """
+    n_proc = len(devices)
+    if cfg.topology is None:
+        return (
+            collectives.make_miner_mesh(devices),
+            build_schedule(n_proc, cfg.n_random_perms, cfg.seed),
+        )
+    from repro.topo.hierarchy import build_hierarchical_schedule
+
+    if cfg.topology.n_proc != n_proc:
+        raise ValueError(
+            f"topology {cfg.topology} needs {cfg.topology.n_proc} devices, "
+            f"got {n_proc}"
+        )
+    return (
+        collectives.make_topo_mesh(cfg.topology, devices),
+        build_hierarchical_schedule(cfg.topology, cfg.n_random_perms, cfg.seed),
+    )
+
+
+def phase_in_specs(cfg: EngineConfig, axis=MINERS_AXIS) -> tuple:
+    """PartitionSpecs of the phase program's argument tuple, in order.
+
+    `axis` is `mesh_axis(mesh)` — a tuple shards the miner dim over both
+    topo axes.  Exposed so the multi-process bootstrap (repro.topo) can wrap
+    host numpy arguments into identically-sharded global arrays.
+    """
+    s = P(axis)
+    if cfg.ckpt_period > 0:
+        # segmented: every carry leaf miner-sharded, then the static
+        # operands db_tiles, pos_mask, thr, delta, n_act, npos_act, t_stop
+        return tuple(s for _ in CARRY_FIELDS) + (P(),) * 7
+    return (s, s, s) + (P(),) * 7
+
+
+def phase_out_specs(cfg: EngineConfig, axis=MINERS_AXIS) -> tuple:
+    """PartitionSpecs of the phase program's outputs, in order."""
+    s = P(axis)
+    if cfg.ckpt_period > 0:
+        return tuple(s for _ in CARRY_FIELDS)
+    return (P(), P(), P(), s, s, s, s, P(), s, P())
+
+
 def build_phase_program(
     packed_dims: tuple[int, int, int],
     *,
@@ -574,32 +641,23 @@ def build_phase_program(
     caches; `mine()` wraps it in a fresh `jax.jit` per call.  `statistic`
     reaches the traced emission test (modes "test"/"count2d" only), so it
     must join any cache key for those modes.
+
+    The mesh decides the collective wiring: a 1-D miners mesh runs every
+    round over its single axis (flat or hierarchical schedule alike); the
+    2-D topo mesh requires a factorized (hierarchical) schedule and splits
+    the census psum and per-round ppermutes across the two axes.
     """
     n_pad, npos_pad, m_pad = packed_dims
+    axis = mesh_axis(mesh)
     program = build_mine_step(
         n=n_pad, n_pos=npos_pad, m=m_pad, cfg=cfg, schedule=schedule,
-        mode=mode, statistic=statistic,
+        mode=mode, axis=axis, statistic=statistic,
     )
-    if cfg.ckpt_period > 0:
-        # segmented program: carry in, carry out (every leaf miner-sharded)
-        carry_specs = tuple(P(MINERS_AXIS) for _ in CARRY_FIELDS)
-        return collectives.shard_map(
-            program,
-            mesh=mesh,
-            # db_tiles, pos_mask, thr, delta, n_act, npos_act, t_stop
-            in_specs=carry_specs + (P(),) * 7,
-            out_specs=carry_specs,
-        )
     return collectives.shard_map(
         program,
         mesh=mesh,
-        in_specs=(
-            P(MINERS_AXIS), P(MINERS_AXIS), P(MINERS_AXIS),  # stacks
-            P(), P(), P(),  # db_tiles, pos_mask, thr
-            P(), P(), P(), P(),  # lam0, delta, n_act, npos_act
-        ),
-        out_specs=(P(), P(), P(), P(MINERS_AXIS), P(MINERS_AXIS),
-                   P(MINERS_AXIS), P(MINERS_AXIS), P(), P(MINERS_AXIS), P()),
+        in_specs=phase_in_specs(cfg, axis),
+        out_specs=phase_out_specs(cfg, axis),
     )
 
 
@@ -795,12 +853,15 @@ def postprocess_phase(
     delta: float,
     statistic: str | None = "fisher",
     partial: bool = False,
+    schedule: LifelineSchedule | None = None,
 ) -> MineOutput:
     """Device output -> MineOutput: slice padding, fold in the root closed
     set, gather emitted pattern records, surface overflow.  `statistic`
     must match the program's: the root closed set never transits the device
     buffers, so its significance is re-decided host-side with the same test
-    (or counted unconditionally when statistic is None — closed-frequent)."""
+    (or counted unconditionally when statistic is None — closed-frequent).
+    `schedule` (when given) keys the decoded trace's per-round/per-tier
+    steal attribution by the round names the pass actually cycled."""
     n, n_pos = packed.n, packed.n_pos
     root_sup = n  # support of the root closure == all transactions
     (g_hist, lam, t, stats, out_occ, out_meta, out_ptr, g_sig, trace,
@@ -868,7 +929,9 @@ def postprocess_phase(
     trace_dropped = 0
     if cfg.trace_period:
         trace_dec = decode_trace(
-            trace, supersteps=int(t), period=cfg.trace_period
+            trace, supersteps=int(t), period=cfg.trace_period,
+            round_names=schedule.names if schedule is not None else None,
+            round_tiers=schedule.tiers if schedule is not None else None,
         )
         trace_dropped = trace_dec.dropped
         if trace_dropped:
@@ -945,8 +1008,7 @@ def mine(
     if devices is None:
         devices = jax.devices()
     n_proc = len(devices)
-    mesh = collectives.make_miner_mesh(devices)
-    schedule = build_schedule(n_proc, cfg.n_random_perms, cfg.seed)
+    mesh, schedule = make_mesh_and_schedule(cfg, devices)
 
     args, ctx = make_program_args(
         packed, n_proc=n_proc, cfg=cfg, mode=mode, alpha=alpha,
@@ -989,7 +1051,7 @@ def mine(
     return postprocess_phase(
         raw, packed=packed, n_proc=n_proc, cfg=cfg, mode=mode,
         thr=ctx["thr"], start_sup=ctx["start_sup"], delta=delta,
-        statistic=statistic, partial=partial,
+        statistic=statistic, partial=partial, schedule=schedule,
     )
 
 

@@ -38,12 +38,19 @@ from .collectives import MINERS_AXIS, axis_index, psum
 __all__ = ["hunger_census", "recompute_lambda", "build_global_sync"]
 
 
-def hunger_census(sp, n_proc: int, axis: str = MINERS_AXIS):
+def hunger_census(sp, n_proc: int, axis=MINERS_AXIS):
     """[P]-int psum of the one-hot hunger bit: who is out of work right now.
 
     `vec[i] == 1` iff miner i's stack is empty; `vec.sum()` is the gate /
     termination count.  4P bytes buys the whole REQUEST side of the steal
     handshake — one collective where the old design used two.
+
+    On the 2-D topo mesh (`axis` = ("hosts", "local")) the census splits
+    into two stages: one intra-host psum (after which every device holds
+    its *host's* partial census — already enough for a local steal round)
+    followed by one cross-host psum of the partials.  `collectives.psum`
+    runs the stages innermost-first; integer addition commutes, so the
+    result is bit-identical to the flat single-axis census.
     """
     vec = jnp.zeros(n_proc, jnp.int32).at[axis_index(axis)].set(
         (sp == 0).astype(jnp.int32)
@@ -66,7 +73,7 @@ def recompute_lambda(g_hist, thr, lam, xp=jnp):
 
 
 def build_global_sync(*, nb: int, mode: str, sync_period: int = 1,
-                      axis: str = MINERS_AXIS):
+                      axis=MINERS_AXIS):
     """Returns global_sync(t, hist, hist_snap, g_hist, lam, thr)
     -> (lam, g_hist, hist_snap).
 

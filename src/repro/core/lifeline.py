@@ -28,13 +28,35 @@ __all__ = ["LifelineSchedule", "build_schedule"]
 class LifelineSchedule:
     n_proc: int
     dim: int  # z
-    # each entry: (request_pairs, reply_pairs) as tuples of (src, dst)
+    # each entry: (request_pairs, reply_pairs) as tuples of (src, dst) in
+    # *global* miner-rank coordinates — what the census-indexed REQUEST
+    # table and any single-axis mesh consume
     rounds: tuple
     names: tuple  # debug labels, e.g. ("rand0", "hc0", "rand1", "hc1", ...)
+    # -------- two-level (topology-factorized) extension; repro.topo -------
+    # A hierarchical schedule additionally factorizes every round onto ONE
+    # mesh axis of the [hosts, local] topo mesh: `round_axes[r]` names that
+    # axis and `axis_rounds[r]` holds the same (request, reply) pairs in
+    # that axis's own coordinates (identical pairing replicated along the
+    # other axis).  None (the flat default) means the schedule can only run
+    # on a 1-D mesh via its global `rounds`.
+    round_axes: tuple | None = None
+    axis_rounds: tuple | None = None
+    # per-round steal tier for telemetry: "local" (intra-host) | "cross"
+    # (host-crossing) | "flat" (one-level schedule — no tier structure)
+    tiers: tuple | None = None
 
     @property
     def n_rounds(self) -> int:
         return len(self.rounds)
+
+    @property
+    def factorized(self) -> bool:
+        """True when every round maps onto a single topo-mesh axis."""
+        return self.round_axes is not None
+
+    def round_tier(self, r: int) -> str:
+        return "flat" if self.tiers is None else self.tiers[r]
 
 
 def _hypercube_pairs(p: int, d: int):

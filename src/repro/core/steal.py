@@ -43,13 +43,21 @@ from .lifeline import LifelineSchedule
 __all__ = ["build_steal_round"]
 
 
-def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
+def build_steal_round(schedule: LifelineSchedule, cfg, axis=MINERS_AXIS):
     """Returns steal_round(t, hungry_vec, n_hungry, occ_stack, meta, sp, head)
     -> (occ_stack, meta, sp, head, got, gave, k_given, k_recv).
 
     `hungry_vec` [P] is the superstep's hunger census (1 per empty miner),
     `n_hungry` its sum; both are replicated psum results, so the `lax.cond`
     gate takes the same branch on every miner.
+
+    `axis` is a single mesh axis name (1-D miners mesh: every round's reply
+    ppermutes its *global* pairs over that axis) or the topo-mesh axis tuple
+    ("hosts", "local") — then the schedule must be factorized (repro.topo
+    hierarchy): each round's reply is one ppermute over just the round's own
+    axis, so intra-host rounds never touch the cross-host interconnect.
+    The REQUEST side is axis-free either way: it reads the requester's bit
+    out of the globally-replicated hunger census.
     """
     T = cfg.steal_max
     cap = cfg.stack_cap
@@ -65,10 +73,23 @@ def build_steal_round(schedule: LifelineSchedule, cfg, axis: str = MINERS_AXIS):
             req_src[r, d] = s
     req_src = jnp.asarray(req_src)
 
-    reply_branches = [
-        functools.partial(ppermute, perm=rep, axis_name=axis)
-        for (_req, rep) in schedule.rounds
-    ]
+    if isinstance(axis, tuple):
+        if not schedule.factorized:
+            raise ValueError(
+                "a flat (one-level) schedule cannot run on the 2-D topo mesh: "
+                "its rounds do not factorize onto single mesh axes — build a "
+                "hierarchical schedule (repro.topo.build_hierarchical_schedule)"
+            )
+        reply_branches = [
+            functools.partial(ppermute, perm=rep, axis_name=round_axis)
+            for round_axis, (_req, rep)
+            in zip(schedule.round_axes, schedule.axis_rounds)
+        ]
+    else:
+        reply_branches = [
+            functools.partial(ppermute, perm=rep, axis_name=axis)
+            for (_req, rep) in schedule.rounds
+        ]
 
     def steal_round(t, hungry_vec, n_hungry, occ_stack, meta, sp, head):
         r = t % R

@@ -57,6 +57,12 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10,
                     help="patterns to mine for --query topk")
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="simulate a hosts x devices-per-host machine "
+                         "(repro.topo): 2-D mesh + hierarchical two-level "
+                         "lifeline schedule, single process")
+    ap.add_argument("--devices-per-host", type=int, default=0,
+                    help="local devices per simulated host (with --hosts)")
     ap.add_argument("--no-steal", action="store_true")
     ap.add_argument("--expand-batch", type=int, default=16)
     ap.add_argument("--steal-max", type=int, default=128)
@@ -112,6 +118,18 @@ def main(argv=None):
         ap.error("--query closed-frequent needs --min-sup N (N >= 1): the "
                  "objective is every closed itemset with support >= N")
 
+    topology = None
+    if args.hosts or args.devices_per_host:
+        if args.hosts < 1 or args.devices_per_host < 1:
+            ap.error("--hosts and --devices-per-host go together (both >= 1)")
+        from repro.topo import Topology
+
+        topology = Topology(args.hosts, args.devices_per_host)
+        if args.devices and args.devices != topology.n_proc:
+            ap.error(f"--devices {args.devices} contradicts --hosts x "
+                     f"--devices-per-host = {topology.n_proc}")
+        args.devices = topology.n_proc
+
     if args.devices:
         from repro.core.collectives import force_host_device_count
 
@@ -161,6 +179,7 @@ def main(argv=None):
             trace_period=args.trace_period,
             trace_cap=args.trace_cap,
             ckpt_period=args.ckpt_period,
+            topology=topology,
             # stack_cap=None: sized by RuntimeConfig.resolve for the
             # dataset's bucket and the devices actually available
             stack_cap=args.stack_cap or None,

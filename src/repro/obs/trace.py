@@ -112,6 +112,13 @@ class SuperstepTrace:
     emitted: np.ndarray    # [P, S] pattern records emitted per miner
     donated: np.ndarray    # [P, S] per-round donation volume per miner
     received: np.ndarray   # [P, S] per-round received volume per miner
+    # the lifeline schedule the engine cycled (LifelineSchedule.names /
+    # .tiers), when the decoder was given it: superstep t ran round
+    # t % len(schedule_names), which keys the per-round steal attribution
+    # below.  None = schedule unknown (legacy decode) — per-round methods
+    # then return empty/flat aggregates.
+    schedule_names: tuple | None = None
+    schedule_tiers: tuple | None = None  # "local" | "cross" | "flat" per round
 
     @property
     def n_miners(self) -> int:
@@ -137,6 +144,57 @@ class SuperstepTrace:
         """Jain's index over per-miner total popped nodes (load balance)."""
         return jain_fairness(self.popped.sum(axis=1))
 
+    def _round_of_step(self) -> np.ndarray | None:
+        """[S] schedule-round index of each sampled superstep, or None."""
+        if self.schedule_names is None or self.n_steps == 0:
+            return None
+        return np.asarray(self.steps) % len(self.schedule_names)
+
+    def steal_by_round(self) -> dict:
+        """Per-schedule-round steal attribution, keyed by round name.
+
+        Each value: {tier, steps, fired, donated, received} summed over the
+        sampled window (all miners).  The multi-host question this answers:
+        how much steal volume moved on cheap intra-host rounds vs expensive
+        cross-host ones.  Empty when the decoder wasn't given the schedule.
+        """
+        rounds = self._round_of_step()
+        if rounds is None:
+            return {}
+        names = self.schedule_names
+        tiers = self.schedule_tiers or ("flat",) * len(names)
+        out: dict = {}
+        for r, name in enumerate(names):
+            mask = rounds == r
+            agg = out.setdefault(name, {
+                "tier": tiers[r], "steps": 0, "fired": 0,
+                "donated": 0, "received": 0,
+            })
+            agg["steps"] += int(mask.sum())
+            agg["fired"] += int(self.fired[mask].sum())
+            agg["donated"] += int(self.donated[:, mask].sum())
+            agg["received"] += int(self.received[:, mask].sum())
+        return out
+
+    def tier_fairness(self) -> dict:
+        """Jain's donation fairness split by schedule tier.
+
+        {tier: index in [1/P, 1]} over per-miner donated volumes restricted
+        to that tier's rounds — the paper's "evenly distributed
+        communication" claim, now answerable separately for the intra-host
+        and cross-host planes.  {} when the schedule is unknown.
+        """
+        rounds = self._round_of_step()
+        if rounds is None:
+            return {}
+        tiers = self.schedule_tiers or ("flat",) * len(self.schedule_names)
+        out = {}
+        for tier in dict.fromkeys(tiers):  # stable unique order
+            round_ids = [r for r, t in enumerate(tiers) if t == tier]
+            mask = np.isin(rounds, round_ids)
+            out[tier] = jain_fairness(self.donated[:, mask].sum(axis=1))
+        return out
+
     def depth_imbalance(self) -> float:
         """Mean over sampled steps of max/mean live stack depth across
         miners (steps where every stack is empty contribute 1.0)."""
@@ -150,7 +208,7 @@ class SuperstepTrace:
     def summary(self) -> dict:
         """JSON-able metrics blob (benchmarks, --verbose run records)."""
         donated_tot = self.donated.sum(axis=1)
-        return {
+        out = {
             "sampled_steps": self.n_steps,
             "period": self.period,
             "dropped": self.dropped,
@@ -167,6 +225,12 @@ class SuperstepTrace:
             "depth_max": [int(x) for x in self.depth.max(axis=1)]
             if self.n_steps else [],
         }
+        if self.schedule_names is not None:
+            out["steal_by_round"] = self.steal_by_round()
+            out["tier_fairness"] = {
+                k: round(v, 4) for k, v in self.tier_fairness().items()
+            }
+        return out
 
 
 def expected_samples(supersteps: int, period: int) -> int:
@@ -177,7 +241,8 @@ def expected_samples(supersteps: int, period: int) -> int:
 
 
 def decode_trace(
-    raw: np.ndarray, *, supersteps: int, period: int
+    raw: np.ndarray, *, supersteps: int, period: int,
+    round_names: tuple | None = None, round_tiers: tuple | None = None,
 ) -> SuperstepTrace:
     """Raw device rings [P, cap, N_FIELDS] -> decoded `SuperstepTrace`.
 
@@ -186,6 +251,10 @@ def decode_trace(
     slot (n_sampled % cap); ordering by the recorded STEP field recovers
     the window.  All miners sample the same steps (t is replicated), so
     miner 0's STEP column orders every miner's ring identically.
+
+    `round_names`/`round_tiers` (LifelineSchedule.names / .tiers) attribute
+    each sampled step to its steal round (t mod n_rounds), enabling the
+    per-round and per-tier steal aggregations on the decoded trace.
     """
     raw = np.asarray(raw)
     if raw.ndim != 3 or raw.shape[2] != N_FIELDS:
@@ -221,4 +290,6 @@ def decode_trace(
         emitted=per_miner(TraceField.EMITTED),
         donated=per_miner(TraceField.DONATED),
         received=per_miner(TraceField.RECEIVED),
+        schedule_names=tuple(round_names) if round_names is not None else None,
+        schedule_tiers=tuple(round_tiers) if round_tiers is not None else None,
     )

@@ -1,0 +1,27 @@
+"""repro.topo — multi-host topology as a first-class engine concept.
+
+The paper's headline 1175x-on-1200-cores result rests on lifeline-graph
+load balancing whose communication stays evenly distributed as the machine
+grows past one host.  This package makes the machine shape explicit:
+
+  topology.py   frozen `Topology(n_hosts, devices_per_host)` — detected from
+                jax.distributed process metadata or forced for simulation;
+                hashable, so it rides the compiled-program cache key.
+  hierarchy.py  the two-level lifeline schedule: cheap intra-host rounds
+                interleaved with less-frequent cross-host rounds, emitted in
+                the same round format `core/steal.py` already consumes.
+  bootstrap.py  `jax.distributed.initialize`-based multi-process bring-up,
+                global-array argument/result marshalling, and a local
+                subprocess cluster launcher so multi-host paths are testable
+                in CI on one machine.
+  simulate.py   host-side BSP work-stealing simulator over real enumeration
+                trees — the makespan model behind benchmarks/bench_scaling.
+
+`bootstrap` is imported lazily (it touches jax.distributed); the topology
+model and the schedule builder are importable with no side effects.
+"""
+
+from .hierarchy import build_hierarchical_schedule
+from .topology import Topology, detect_topology
+
+__all__ = ["Topology", "detect_topology", "build_hierarchical_schedule"]

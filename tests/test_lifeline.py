@@ -4,14 +4,18 @@ Every round of the schedule is consumed by a paired `ppermute` exchange
 (core/steal.py), which silently mis-routes work if a round is not a valid
 pairing or the reply permutation is not the inverse of the request one — so
 these invariants are load-bearing for correctness, not style.  Checked over
-P in {1, 2, 3, 5, 8, 13}: powers of two AND the "hypercube with holes" cases.
+P in {1, 2, 3, 5, 8, 13}: powers of two AND the "hypercube with holes" cases;
+and over P in {128, 1000, 1024, 1200} — the paper's machine scale (Fig. 5
+runs 1216 cores), where the builder must stay correct with 10+ hypercube
+dims and derangements over four-digit rank counts (repro.topo sizes its
+cross tier with exactly these builders at n_hosts up to the hundreds).
 """
 
 import pytest
 
 from repro.core.lifeline import build_schedule
 
-PS = [1, 2, 3, 5, 8, 13]
+PS = [1, 2, 3, 5, 8, 13, 128, 1000, 1024, 1200]
 
 
 @pytest.fixture(params=PS, ids=[f"P{p}" for p in PS])

@@ -237,9 +237,11 @@ def test_ring_wrap_warns_and_counts():
                    cfg=_cfg(trace_period=1, trace_cap=cap))
     assert any("trace ring wrapped" in str(x.message) for x in w)
     assert res.trace_dropped == res.supersteps - cap
-    # the device-side counter agrees with the host-side decode
+    # the device-side counter agrees with the host-side decode; every miner
+    # samples on the same global step cadence, so the [P] counter is uniform
     np.testing.assert_array_equal(
-        res.stats["trace_dropped"], np.full(1, res.trace_dropped)
+        res.stats["trace_dropped"],
+        np.full_like(res.stats["trace_dropped"], res.trace_dropped),
     )
     # the surviving window is the most recent one, results still exact
     assert res.trace.steps.tolist() == list(

@@ -1,0 +1,359 @@
+"""repro.topo: topology model, hierarchical schedule, simulator, and the
+machine-shape end-to-end oracles (DESIGN.md §12).
+
+The load-bearing claim is schedule-invariance: steals only redistribute
+work and every reduction commutes, so the SAME ResultSet — p-values
+included — must come out of a flat 8-device run, a forced 2x4-topology
+single-process run, and a real 2-process x 4-device gloo cluster.  The
+[slow] oracles assert exactly that; the fast tests pin the schedule and
+cost-model invariants the oracles rely on.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.lifeline import build_schedule
+from repro.topo import Topology, build_hierarchical_schedule, detect_topology
+from repro.topo.simulate import (
+    C_CROSS_ROUND_S,
+    C_LOCAL_ROUND_S,
+    extract_tree,
+    round_costs,
+    simulate_mine,
+    sync_cost,
+)
+
+HARNESS = os.path.join(os.path.dirname(__file__), "topo_subproc_main.py")
+
+TOPOS = [
+    Topology(2, 4),
+    Topology(4, 8),
+    Topology(16, 8),
+    Topology(125, 8),   # P = 1000: hosts are a non-power-of-two
+    Topology(128, 8),   # P = 1024
+    Topology(150, 8),   # P = 1200: holes in the host hypercube
+]
+
+
+# ----------------------------------------------------------------- topology
+def test_topology_rank_maps_roundtrip():
+    topo = Topology(3, 5)
+    assert topo.n_proc == 15
+    for rank in range(topo.n_proc):
+        h, ll = topo.host_of(rank), topo.local_of(rank)
+        assert 0 <= h < 3 and 0 <= ll < 5
+        assert topo.rank_of(h, ll) == rank
+    assert topo.same_host(5, 9) and not topo.same_host(4, 5)
+    assert str(topo) == "3x5"
+
+
+def test_topology_validates():
+    with pytest.raises(ValueError):
+        Topology(0, 4)
+    with pytest.raises(ValueError):
+        Topology(2, -1)
+
+
+def test_detect_topology_single_process():
+    import jax
+
+    topo = detect_topology()
+    assert topo.n_hosts == 1
+    assert topo.devices_per_host == jax.local_device_count()
+
+
+# ------------------------------------------------- hierarchical schedule
+@pytest.fixture(params=TOPOS, ids=[str(t) for t in TOPOS])
+def topo_schedule(request):
+    return request.param, build_hierarchical_schedule(request.param)
+
+
+def test_rounds_are_valid_pairings_with_inverse_replies(topo_schedule):
+    topo, sch = topo_schedule
+    p = topo.n_proc
+    assert sch.n_proc == p
+    for (req, rep), name in zip(sch.rounds, sch.names):
+        srcs = [s for s, _ in req]
+        dsts = [d for _, d in req]
+        assert all(0 <= s < p for s in srcs), name
+        assert len(set(srcs)) == len(srcs), name
+        assert len(set(dsts)) == len(dsts), name
+        assert set(srcs) == set(dsts), name
+        assert set(rep) == {(d, s) for s, d in req}, name
+
+
+def test_round_names_tiers_axes_agree(topo_schedule):
+    _topo, sch = topo_schedule
+    assert sch.factorized
+    assert len(sch.names) == len(sch.tiers) == len(sch.round_axes) \
+        == len(sch.axis_rounds) == sch.n_rounds
+    for name, tier, axis in zip(sch.names, sch.tiers, sch.round_axes):
+        if tier == "local":
+            assert name.startswith("loc_") and axis == "local"
+        else:
+            assert tier == "cross"
+            assert name.startswith("x_") and axis == "hosts"
+
+
+def test_local_rounds_stay_on_host_cross_rounds_keep_local_rank(topo_schedule):
+    topo, sch = topo_schedule
+    for (req, _rep), tier in zip(sch.rounds, sch.tiers):
+        for s, d in req:
+            if tier == "local":
+                assert topo.same_host(s, d)
+            else:
+                assert not topo.same_host(s, d)
+                assert topo.local_of(s) == topo.local_of(d)
+
+
+def test_axis_rounds_expand_to_global_rounds(topo_schedule):
+    topo, sch = topo_schedule
+    d = topo.devices_per_host
+    for (greq, _), (areq, _), tier in zip(sch.rounds, sch.axis_rounds,
+                                          sch.tiers):
+        if tier == "local":
+            want = {(h * d + a, h * d + b)
+                    for h in range(topo.n_hosts) for a, b in areq}
+        else:
+            want = {(g * d + ll, j * d + ll)
+                    for g, j in areq for ll in range(d)}
+        assert set(greq) == want
+
+
+def test_lifeline_union_connects_the_whole_machine(topo_schedule):
+    topo, sch = topo_schedule
+    p = topo.n_proc
+    adj = {i: set() for i in range(p)}
+    for req, _rep in sch.rounds:
+        for s, d in req:
+            adj[s].add(d)
+            adj[d].add(s)
+    reach, frontier = {0}, [0]
+    while frontier:
+        nxt = adj[frontier.pop()] - reach
+        reach |= nxt
+        frontier.extend(nxt)
+    assert reach == set(range(p)), f"steal graph disconnected for {topo}"
+
+
+def test_cross_fraction_is_pinned_regardless_of_host_count():
+    # the cycle inserts cross_every locals before each cross round, so the
+    # cross share never drifts up as log2(H) outgrows log2(D)
+    for topo in (Topology(16, 8), Topology(128, 8)):
+        for ce in (1, 3):
+            sch = build_hierarchical_schedule(topo, cross_every=ce)
+            n_cross = sum(t == "cross" for t in sch.tiers)
+            n_local = sum(t == "local" for t in sch.tiers)
+            assert n_local >= ce * n_cross
+
+
+def test_single_miner_schedule_is_one_noop_round():
+    sch = build_hierarchical_schedule(Topology(1, 1))
+    assert sch.n_rounds == 1 and sch.rounds == (((), ()),)
+    assert sch.factorized
+
+
+def test_one_host_hierarchy_matches_flat_schedule():
+    # H == 1: the local tier is built exactly like the flat schedule at
+    # size D with the same rng stream, so the global rounds coincide
+    sch_h = build_hierarchical_schedule(Topology(1, 8), n_random=4, seed=0)
+    sch_f = build_schedule(8, n_random=4, seed=0)
+    assert sch_h.rounds == sch_f.rounds
+    assert all(t == "local" for t in sch_h.tiers)
+
+
+def test_flat_schedule_rejects_topo_mesh_axis():
+    from repro.core.engine import EngineConfig
+    from repro.core.steal import build_steal_round
+
+    cfg = EngineConfig(expand_batch=4, stack_cap=512, steal_max=16,
+                       push_cap=64, out_cap=64)
+    with pytest.raises(ValueError, match="flat"):
+        build_steal_round(build_schedule(8), cfg, axis=("hosts", "local"))
+
+
+def test_engine_config_topology_mismatch_raises():
+    import jax
+
+    from repro.core.engine import EngineConfig, make_mesh_and_schedule
+
+    cfg = EngineConfig(expand_batch=4, stack_cap=512, steal_max=16,
+                       push_cap=64, out_cap=64,
+                       topology=Topology(2, 4))
+    with pytest.raises(ValueError, match="topology"):
+        make_mesh_and_schedule(cfg, jax.devices()[:1])
+
+
+# ------------------------------------------------------------- simulator
+@pytest.fixture(scope="module")
+def small_tree():
+    rng = np.random.default_rng(7)
+    db = rng.random((120, 30)) < 0.3
+    return extract_tree(db, min_sup=4)
+
+
+def test_simulator_conserves_work(small_tree):
+    topo = Topology(2, 4)
+    res = simulate_mine(small_tree, build_hierarchical_schedule(topo), topo)
+    # every node except the host-dealt root is popped exactly once,
+    # regardless of how the steal schedule shuffled the subtrees
+    assert res.total_popped == small_tree.n_nodes - 1
+    assert sum(res.popped_per_miner) == res.total_popped
+    assert res.supersteps > 0 and res.makespan_s > 0
+
+
+def test_simulator_schedule_invariance_of_totals(small_tree):
+    topo = Topology(2, 4)
+    flat = simulate_mine(small_tree, build_schedule(8), topo)
+    hier = simulate_mine(small_tree, build_hierarchical_schedule(topo), topo)
+    static = simulate_mine(small_tree, build_schedule(8), topo,
+                           steal_enabled=False)
+    assert flat.total_popped == hier.total_popped == static.total_popped
+    assert static.steals == 0
+
+
+def test_one_host_simulation_identical_for_both_schedules(small_tree):
+    topo = Topology(1, 8)
+    flat = simulate_mine(small_tree, build_schedule(8), topo)
+    hier = simulate_mine(small_tree, build_hierarchical_schedule(topo), topo)
+    assert flat == hier  # same rounds, same costs, same trajectory
+
+
+def test_round_costs_tier_structure():
+    topo = Topology(8, 8)
+    hier = build_hierarchical_schedule(topo)
+    costs = round_costs(hier, topo)
+    for c, tier in zip(costs, hier.tiers):
+        if tier == "local":
+            assert c == C_LOCAL_ROUND_S
+        else:
+            # aligned host pairing: fan-out 1, exactly one cross latency
+            assert c == C_CROSS_ROUND_S
+    flat_costs = round_costs(build_schedule(64), topo)
+    # a flat random derangement scatters hosts across many peers: at least
+    # one round pays the fan-out serialization premium
+    assert max(flat_costs) > C_CROSS_ROUND_S
+    # low hypercube dims stay intra-host under the block rank mapping
+    assert min(flat_costs) == C_LOCAL_ROUND_S
+
+
+def test_sync_cost_shape():
+    assert sync_cost(Topology(1, 1)) == 0.0
+    assert sync_cost(Topology(1, 8)) == 3 * C_LOCAL_ROUND_S
+    assert sync_cost(Topology(4, 1)) == 2 * C_CROSS_ROUND_S
+    assert sync_cost(Topology(4, 8)) == \
+        3 * C_LOCAL_ROUND_S + 2 * C_CROSS_ROUND_S
+
+
+# ------------------------------------------------- per-round telemetry
+def _mk_trace(names, tiers, steps, fired, donated, received):
+    from repro.obs.trace import SuperstepTrace
+
+    steps = np.asarray(steps)
+    shape = (donated.shape[0], steps.size)
+    z = np.zeros(shape, np.int64)
+    return SuperstepTrace(
+        period=1, cap=64, dropped=0, steps=steps,
+        lam=np.zeros(steps.size, np.int64),
+        n_hungry=np.zeros(steps.size, np.int64),
+        fired=np.asarray(fired),
+        depth=z, popped=z, pushed=z, closed=z, emitted=z,
+        donated=donated, received=received,
+        schedule_names=names, schedule_tiers=tiers,
+    )
+
+
+def test_steal_by_round_attributes_and_accumulates_duplicates():
+    # cyclic 3-round schedule with a repeated name (cross_every repeats
+    # local rounds inside one grand cycle): both positions must pool
+    names = ("loc_a", "x_b", "loc_a")
+    tiers = ("local", "cross", "local")
+    donated = np.array([[4, 0, 2, 0], [0, 6, 0, 0]])
+    received = np.array([[0, 6, 0, 0], [4, 0, 2, 0]])
+    tr = _mk_trace(names, tiers, steps=[0, 1, 2, 3], fired=[1, 1, 1, 0],
+                   donated=donated, received=received)
+    by_round = tr.steal_by_round()
+    assert set(by_round) == {"loc_a", "x_b"}
+    # steps 0, 2 (both loc_a) and step 3 (loc_a again, round 3 % 3 == 0)
+    assert by_round["loc_a"]["steps"] == 3
+    assert by_round["loc_a"]["donated"] == 4 + 2 + 0
+    assert by_round["loc_a"]["tier"] == "local"
+    assert by_round["x_b"] == {
+        "tier": "cross", "steps": 1, "fired": 1, "donated": 6, "received": 6,
+    }
+
+
+def test_tier_fairness_splits_by_tier():
+    names = ("loc_a", "x_b")
+    tiers = ("local", "cross")
+    # local donations all from miner 0 (unfair); cross split evenly (fair)
+    donated = np.array([[10, 3, 10, 3], [0, 3, 0, 3]])
+    tr = _mk_trace(names, tiers, steps=[0, 1, 2, 3], fired=[1, 1, 1, 1],
+                   donated=donated, received=donated)
+    tf = tr.tier_fairness()
+    assert set(tf) == {"local", "cross"}
+    assert tf["cross"] == pytest.approx(1.0)
+    assert tf["local"] == pytest.approx(0.5)  # jain([20, 0]) with P=2
+
+
+def test_untraced_sessions_report_empty_round_telemetry():
+    tr = _mk_trace(None, None, steps=[0, 1], fired=[0, 0],
+                   donated=np.zeros((2, 2), np.int64),
+                   received=np.zeros((2, 2), np.int64))
+    assert tr.steal_by_round() == {}
+    assert tr.tier_fairness() == {}
+
+
+# ------------------------------------------------------- [slow] oracles
+def _run_standalone(spec):
+    r = subprocess.run(
+        [sys.executable, HARNESS, json.dumps(spec)],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+DATA = dict(n_items=24, n_transactions=60, density=0.15, n_pos=20, alpha=0.05)
+
+IDENTITY_KEYS = ("lambda_final", "min_sup", "correction_factor", "delta",
+                 "n_significant", "patterns")
+
+
+@pytest.mark.slow
+def test_forced_topology_bit_identical_to_flat():
+    """2x4 simulated topology (one process, 8 devices, hierarchical
+    schedule on the 2-D mesh) vs the flat 8-device run: same ResultSet,
+    p-values included."""
+    flat = _run_standalone(dict(DATA, n_devices=8, topology="flat"))
+    hier = _run_standalone(dict(DATA, n_devices=8, topology="hier",
+                                n_hosts=2, devices_per_host=4,
+                                trace_period=1))
+    for k in IDENTITY_KEYS:
+        assert flat[k] == hier[k], k
+    # the traced hierarchical run attributes steals to named rounds
+    assert hier["steal_by_round"]
+    assert {v["tier"] for v in hier["steal_by_round"].values()} \
+        <= {"local", "cross"}
+    assert set(hier["tier_fairness"]) <= {"local", "cross"}
+
+
+@pytest.mark.slow
+def test_multiprocess_cluster_bit_identical_to_flat():
+    """A real 2-process x 4-device gloo cluster (jax.distributed) vs the
+    flat single-process 8-device run: same ResultSet, p-values included."""
+    from repro.topo.bootstrap import launch_local_cluster
+
+    flat = _run_standalone(dict(DATA, n_devices=8, topology="flat"))
+    hier = launch_local_cluster(
+        HARNESS, dict(DATA, topology="hier"),
+        n_processes=2, devices_per_process=4,
+    )
+    assert hier["n_devices_global"] == 8
+    for k in IDENTITY_KEYS:
+        assert flat[k] == hier[k], k

@@ -1,0 +1,115 @@
+"""Subprocess entry for multi-process (simulated multi-host) topo tests.
+
+Two invocation styles share this harness:
+
+- **Cluster child** (via `repro.topo.bootstrap.launch_local_cluster`): the
+  spec carries coordinator/num_processes/process_id and the launcher's
+  environment already forces the per-process device count, so the child
+  calls `init_distributed` *before any other jax use* and mines on the
+  2-D topo mesh spanning all processes.
+
+- **Standalone** (plain `python topo_subproc_main.py '<spec>'` with
+  `n_devices` in the spec): mirrors tests/engine_subproc_main.py — sets
+  the device-count XLA flag itself and runs single-process, either flat
+  (no topology) or with a *forced* topology simulated on local devices.
+
+Prints one JSON line: the full pattern set (items, support, pos_support,
+pvalue, qvalue) plus the LAMP quantities, so the parent can assert
+bit-identity across machine shapes.
+"""
+
+import json
+import os
+import sys
+
+
+def main():
+    spec = json.loads(sys.argv[1])
+    if "n_devices" in spec:
+        # standalone mode: replace (not just prepend to) any inherited
+        # device-count flag, exactly as engine_subproc_main does
+        inherited = [
+            f for f in os.environ.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")
+        ]
+        os.environ["XLA_FLAGS"] = " ".join(
+            [f"--xla_force_host_platform_device_count={spec['n_devices']}"]
+            + inherited
+        )
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    n_proc = int(spec.get("num_processes", 1))
+    if n_proc > 1:
+        # must run before the first jax backend touch in this process
+        from repro.topo.bootstrap import init_distributed
+
+        init_distributed(spec["coordinator"], n_proc, spec["process_id"])
+
+    import jax
+
+    from repro.api import (
+        AlgorithmConfig,
+        Dataset,
+        MinerSession,
+        RuntimeConfig,
+    )
+    from repro.data.synthetic import SyntheticSpec, generate
+    from repro.topo import Topology
+
+    # every process derives the identical dataset deterministically
+    db, labels, _ = generate(SyntheticSpec(
+        name="topo",
+        n_items=spec["n_items"],
+        n_transactions=spec["n_transactions"],
+        density=spec["density"],
+        n_pos=spec["n_pos"],
+        n_planted=spec.get("n_planted", 2),
+        seed=spec.get("seed", 0),
+    ))
+
+    topo = None
+    if spec.get("topology") == "hier":
+        if n_proc > 1:
+            topo = Topology(n_proc, jax.local_device_count())
+        else:
+            topo = Topology(spec["n_hosts"], spec["devices_per_host"])
+
+    runtime = RuntimeConfig(
+        expand_batch=spec.get("expand_batch", 8),
+        stack_cap=spec.get("stack_cap", 4096),
+        steal_max=spec.get("steal_max", 64),
+        push_cap=spec.get("push_cap", 256),
+        out_cap=spec.get("out_cap", 1024),
+        kernel_impl=spec.get("kernel_impl", "ref"),
+        trace_period=spec.get("trace_period", 0),
+        topology=topo,
+    )
+    session = MinerSession(
+        algorithm=AlgorithmConfig(alpha=spec.get("alpha", 0.05)),
+        runtime=runtime,
+    )
+    rep = session.mine(Dataset.from_dense(db, labels, name="topo"))
+
+    out = {
+        "process_id": spec.get("process_id", 0),
+        "n_devices_global": jax.device_count(),
+        "lambda_final": rep.lambda_final,
+        "min_sup": rep.min_sup,
+        "correction_factor": rep.correction_factor,
+        "delta": rep.delta,
+        "n_significant": rep.n_significant,
+        "patterns": [
+            [list(p.items), p.support, p.pos_support, p.pvalue, p.qvalue]
+            for p in rep.results
+        ],
+        "supersteps": [p.supersteps for p in rep.phases],
+    }
+    if spec.get("trace_period", 0):
+        p1 = rep.phases[0]
+        out["steal_by_round"] = p1.steal_by_round
+        out["tier_fairness"] = p1.tier_fairness
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()
